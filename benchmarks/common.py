@@ -1,0 +1,55 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (blocks on device)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def make_convnet(widths=(8, 16), blocks=1, bn="unit", seed=0):
+    from repro.models.resnet import ConvNet, ConvNetConfig
+    cfg = ConvNetConfig(widths=widths, blocks_per_stage=blocks, bn_fisher=bn)
+    model = ConvNet(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params
+
+
+def image_batch(b=64, size=16, seed=0):
+    from repro.data.synthetic import image_batches
+    return next(image_batches(10, b, size=size, seed=seed))
+
+
+def make_tiny_lm(arch="llama3_2_1b", seed=0):
+    from repro.configs import get_config
+    from repro.models.transformer import DecoderLM
+    cfg = get_config(arch).reduced()
+    model = DecoderLM(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, cfg
+
+
+def lm_data(cfg, b=8, s=64, seed=0):
+    from repro.data.synthetic import token_batches
+    it = token_batches(cfg.vocab, b, s, seed=seed)
+    return it

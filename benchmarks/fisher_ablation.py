@@ -1,0 +1,72 @@
+"""Paper Fig. 5 ablation: per-step cost of the practical-NGD techniques.
+
+Measures wall time per training step on the ConvNet for:
+  sgd                 first-order reference
+  1mc + fullBN        the naive NGD baseline (extra backward + 2Cx2C BN)
+  1mc + unitBN
+  emp + fullBN
+  emp + unitBN        the paper's practical estimator set
+  emp + unitBN, no-refresh step ("stale" steady state: Algorithm 1's fast
+                      path — the cost the paper drives NGD down to)
+
+Derived column reports the overhead ratio vs SGD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import image_batch, make_convnet, row, time_fn
+from repro.core.ngd import NGDConfig, SPNGD
+from repro.optim.sgd import SGD
+
+
+def run(quick: bool = False):
+    batch = image_batch(b=32 if quick else 128, size=16)
+    out = []
+    model, params = make_convnet(widths=(8, 16), blocks=1)
+
+    sgd = SGD(model.loss)
+    sgd_state = sgd.init(params)
+    t_sgd = time_fn(jax.jit(sgd.step), params, sgd_state, batch, 0.1, 0.9)
+    out.append(row("fig5.sgd_step", t_sgd, "x1.00"))
+
+    variants = [("emp", "unit"), ("emp", "full"),
+                ("1mc", "unit"), ("1mc", "full")]
+    t_emp_unit = None
+    for est, bn in variants:
+        model_v, params_v = make_convnet(widths=(8, 16), blocks=1, bn=bn)
+        opt = SPNGD(model_v.loss, model_v.site_infos(), model_v.fstats,
+                    model_v.site_counts,
+                    NGDConfig(damping=1e-3, estimator=est))
+        state = opt.init(params_v)
+        flags = {k: jnp.asarray(True) for k in opt.stat_names()}
+        if est == "1mc":
+            fn = jax.jit(lambda p, s, b: opt.step(
+                p, s, b, flags, 1e-3, 0.05, 0.9,
+                rng=jax.random.PRNGKey(0)))
+        else:
+            fn = jax.jit(lambda p, s, b: opt.step(p, s, b, flags,
+                                                  1e-3, 0.05, 0.9))
+        t = time_fn(fn, params_v, state, batch)
+        out.append(row(f"fig5.{est}_{bn}BN_step", t, f"x{t / t_sgd:.2f}"))
+        if (est, bn) == ("emp", "unit"):
+            t_emp_unit = t
+            state_ref = state
+            opt_ref = opt
+            params_ref = params_v
+
+    # stale steady state: no statistic refresh (Algorithm 1 fast path)
+    fastfn = jax.jit(lambda p, s, b: opt_ref.step_fast(p, s, b, 1e-3, 0.05,
+                                                       0.9))
+    t_fast = time_fn(fastfn, params_ref, state_ref, batch)
+    out.append(row("fig5.emp_unitBN_stale_step", t_fast,
+                   f"x{t_fast / t_sgd:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas kernels vs pure-jnp oracles.
+
+On CPU the Pallas kernels run in interpret mode (Python emulation) so their
+wall time is NOT indicative of TPU performance; we report the jnp-oracle
+time as the timing column and the kernel-vs-oracle max |err| as the derived
+column (the correctness contract the TPU kernel must meet).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = False):
+    out = []
+    rng = np.random.RandomState(0)
+    n, d = (256, 128) if quick else (1024, 256)
+
+    x = jnp.asarray(rng.randn(n, d), jnp.bfloat16)
+    t = time_fn(jax.jit(ref.kfac_factor_ref), x)
+    err = float(jnp.max(jnp.abs(
+        ops.kfac_factor(x, bm=64, bn=64, bk=128, interpret=True)
+        - ref.kfac_factor_ref(x))))
+    out.append(row("kernel.kfac_factor_syrk", t, f"maxerr={err:.2e}"))
+
+    nb, b, m = (2, 64, 64) if quick else (4, 128, 128)
+    binv = jnp.asarray(rng.randn(nb, b, b), jnp.float32)
+    w = jnp.asarray(rng.randn(nb, b, m), jnp.float32)
+    t = time_fn(jax.jit(ref.block_precond_ref), binv, w)
+    err = float(jnp.max(jnp.abs(
+        ops.kfac_block_precond(binv, w, bm=32, bn=32, bk=32, interpret=True)
+        - ref.block_precond_ref(binv, w))))
+    out.append(row("kernel.kfac_block_precond", t, f"maxerr={err:.2e}"))
+
+    bh, s, hd, win = (2, 64, 32, 16) if quick else (4, 128, 64, 32)
+    q = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    t = time_fn(jax.jit(lambda q, k, v: ref.swa_attention_ref(
+        q, k, v, window=win)), q, k, v)
+    err = float(jnp.max(jnp.abs(
+        ops.swa_attention(q, k, v, window=win, bq=32, bk=32, interpret=True)
+        - ref.swa_attention_ref(q, k, v, window=win))))
+    out.append(row("kernel.swa_attention", t, f"maxerr={err:.2e}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

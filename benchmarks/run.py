@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  convergence      Table 1 / Fig. 1  (NGD vs SGD steps-to-target)
+  fisher_ablation  Fig. 5 technique ablation (emp/1mc x unitBN/fullBN x stale)
+  stale_reduction  Table 2 reduction % + Fig. 6 byte series
+  scaling          Fig. 5 time/step vs #devices (measured + comm model)
+  kernels_bench    Pallas kernel contracts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (convergence, fisher_ablation, kernels_bench,
+                            scaling, stale_reduction)
+    modules = {
+        "kernels_bench": kernels_bench,
+        "fisher_ablation": fisher_ablation,
+        "stale_reduction": stale_reduction,
+        "scaling": scaling,
+        "convergence": convergence,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules.items():
+        try:
+            for r in mod.run(quick=args.quick):
+                print(r, flush=True)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}.ERROR,0.0,{type(e).__name__}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

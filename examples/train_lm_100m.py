@@ -1,0 +1,112 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model with the
+full SP-NGD stack — microbatch accumulation, adaptive stale statistics,
+polynomial LR decay with coupled momentum, checkpointing — for a few hundred
+steps on the synthetic Markov LM task.
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 200] [--sgd]
+
+The ~100M config: 12L, d_model=768, 12 heads (GQA kv=4), d_ff=2048,
+vocab=32768  ->  ~99M parameters.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.configs import get_config
+from repro.core.ngd import NGDConfig, SPNGD
+from repro.core.stale import IntervalController
+from repro.data.synthetic import token_batches
+from repro.launch.train import make_train_step, make_fast_step
+from repro.models.transformer import DecoderLM
+from repro.optim.schedules import polynomial_decay
+from repro.optim.sgd import SGD
+
+
+def build_model():
+    base = get_config("llama3_2_1b")
+    cfg = dataclasses.replace(
+        base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+        head_dim=64, d_ff=2048, vocab=32768, kfac_max_dim=1024,
+        dtype=jnp.float32, remat=False)
+    return DecoderLM(cfg), cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=2e-2)
+    ap.add_argument("--damping", type=float, default=2.5e-4)
+    ap.add_argument("--sgd", action="store_true", help="first-order baseline")
+    ap.add_argument("--ckpt", default="/tmp/spngd_ckpt")
+    args = ap.parse_args()
+
+    model, cfg = build_model()
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {n_params / 1e6:.1f}M params, vocab {cfg.vocab}")
+
+    data = token_batches(cfg.vocab, args.batch, args.seq, seed=0)
+    lr_fn = polynomial_decay(args.lr, 0, args.steps, 4.0)
+
+    if args.sgd:
+        opt = SGD(model.loss)
+        state = opt.init(params)
+        step_j = jax.jit(opt.step)
+        for t in range(1, args.steps + 1):
+            lr = lr_fn(t - 1)
+            t0 = time.time()
+            params, state, m = step_j(params, state, next(data), lr, 0.9)
+            if t % 10 == 0 or t == 1:
+                print(f"[sgd] step {t:4d} loss {float(m['loss']):.4f} "
+                      f"lr {lr:.4f} ({time.time() - t0:.2f}s)")
+        return
+
+    opt = SPNGD(model.loss, model.site_infos(), model.fstats,
+                model.site_counts, NGDConfig(damping=args.damping))
+    state = opt.init(params)
+    ctrl = IntervalController(opt.stat_names(), alpha=0.1,
+                              bytes_per_stat=opt.stat_bytes())
+    train_j = jax.jit(make_train_step(model, opt, accum=args.accum))
+    fast_j = jax.jit(make_fast_step(model, opt, accum=args.accum))
+
+    for t in range(1, args.steps + 1):
+        batch = next(data)
+        lr = lr_fn(t - 1)
+        mom = 0.9 * lr / args.lr          # Eq. 22 coupled momentum
+        flags = ctrl.flags(t)
+        t0 = time.time()
+        if any(flags.values()):
+            jflags = {k: jnp.asarray(v) for k, v in flags.items()}
+            params, state, m = train_j(params, state, batch, jflags,
+                                       args.damping, lr, mom)
+            sims = {k: (float(v[0]), float(v[1]))
+                    for k, v in m["sims"].items()}
+            ctrl.update(t, flags, sims)
+        else:
+            params, state, m = fast_j(params, state, batch,
+                                      args.damping, lr, mom)
+            ctrl.update(t, flags, {})
+        if t % 10 == 0 or t == 1:
+            nref = sum(flags.values())
+            print(f"[spngd] step {t:4d} loss {float(m['loss']):.4f} "
+                  f"lr {lr:.4f} refresh {nref:2d}/{len(flags)} "
+                  f"({time.time() - t0:.2f}s)")
+        if t % 100 == 0:
+            save_checkpoint(args.ckpt, t, params,
+                            controller=ctrl.summary())
+            print(f"checkpoint @ {t} -> {args.ckpt}")
+
+    s = ctrl.summary()
+    print(f"\nfinal loss {float(m['loss']):.4f}; statistic traffic reduced "
+          f"to {100 * s['reduction_rate']:.1f}% of refresh-every-step")
+
+
+if __name__ == "__main__":
+    main()

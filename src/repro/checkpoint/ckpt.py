@@ -1,0 +1,78 @@
+"""Minimal dependency-free checkpointing: pytrees -> .npz + structure file.
+
+Handles params, optimizer state (including the curvature factors / inverses,
+so a restore resumes with warm statistics — important because Algorithm 1's
+intervals assume continuity), and host-side controller state (JSON).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}|"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict) -> dict:
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split("|")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return root
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params: Any,
+                    opt_state: Optional[Any] = None,
+                    controller: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    np.savez(path + ".params.npz", **_flatten(params))
+    if opt_state is not None:
+        np.savez(path + ".opt.npz", **_flatten(opt_state))
+    if controller is not None:
+        with open(path + ".ctrl.json", "w") as f:
+            json.dump(controller, f)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    marker = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        return int(f.read().strip())
+
+
+def restore_checkpoint(ckpt_dir: str, step: Optional[int] = None):
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    params = _unflatten(dict(np.load(path + ".params.npz")))
+    opt_state = None
+    if os.path.exists(path + ".opt.npz"):
+        opt_state = _unflatten(dict(np.load(path + ".opt.npz")))
+    controller = None
+    if os.path.exists(path + ".ctrl.json"):
+        with open(path + ".ctrl.json") as f:
+            controller = json.load(f)
+    return {"step": step, "params": params, "opt_state": opt_state,
+            "controller": controller}

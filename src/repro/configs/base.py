@@ -1,0 +1,135 @@
+"""Architecture configuration schema + registry (--arch <id>) and the four
+assigned input shapes."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str               # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                 # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    block_type: str = "dense"    # dense | moe | hymba | rwkv
+    act: str = "silu"
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 5e5
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    # attention
+    sliding_window: int = 0      # 0 = full causal
+    # frontend stubs (vlm / audio)
+    frontend: str = "none"       # none | vision | audio
+    frontend_tokens: int = 0     # patches / frames prepended
+    frontend_dim: int = 0        # raw embedding dim before projector
+    # K-FAC
+    kfac_max_dim: int = 2048
+    head_g_kind: str = "diag"    # vocab-side factor of the LM head
+    tp_shards: int = 0           # >0: align factor blocks to TP shard width
+    min_block: int = 128         # don't align below this block size (MXU)
+    scan_chunk: int = 0          # >0: chunk recurrent scans (rwkv/ssm state
+                                 # stays on-chip for `scan_chunk` tokens)
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # citation
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def validate(self) -> None:
+        if self.block_type in ("dense", "moe", "hymba"):
+            assert self.n_heads > 0 and self.n_heads % self.n_kv_heads == 0
+        if self.block_type == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Smoke-test variant: same family, tiny dims (2 layers, d<=512,
+        <=4 experts)."""
+        hd = min(self.hd, 64)
+        n_heads = max(2, min(4, self.n_heads)) if self.n_heads else 0
+        n_kv = max(1, min(n_heads, max(1, self.n_kv_heads * n_heads
+                                       // max(self.n_heads, 1))))
+        kw = dict(
+            n_layers=2,
+            d_model=min(self.d_model, hd * max(n_heads, 2) if n_heads else 128),
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 256),
+            vocab=min(self.vocab, 512),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else 0,
+            frontend_tokens=min(self.frontend_tokens, 8) if self.frontend_tokens else 0,
+            frontend_dim=min(self.frontend_dim, 64) if self.frontend_dim else 0,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            kfac_max_dim=128,
+            dtype=jnp.float32,
+            remat=False,
+        )
+        kw.update(overrides)
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCHS = [
+    "qwen1_5_4b", "hymba_1_5b", "musicgen_medium", "llama3_2_1b",
+    "mixtral_8x22b", "qwen2_moe_a2_7b", "llava_next_34b", "nemotron_4_340b",
+    "rwkv6_7b", "llama3_2_3b", "resnet50",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+_ALIASES.update({"qwen1.5-4b": "qwen1_5_4b", "hymba-1.5b": "hymba_1_5b",
+                 "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+                 "llama3.2-1b": "llama3_2_1b", "llama3.2-3b": "llama3_2_3b"})
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg = mod.CONFIG
+    if isinstance(cfg, ArchConfig):
+        cfg.validate()
+    return cfg

@@ -1,0 +1,5 @@
+"""The paper's own benchmark model family (scaled): conv + BatchNorm net
+exercising conv K-FAC (Eq. 10-11) and unit-wise BN Fisher (Eq. 15-17)."""
+from repro.models.resnet import ConvNetConfig
+
+CONFIG = ConvNetConfig(n_classes=10, widths=(16, 32, 64), blocks_per_stage=2)

@@ -1,0 +1,126 @@
+"""Fisher information estimation (paper §3.2, §4.1).
+
+Two estimators, matching the paper's `emp` vs `1mc` ablation:
+
+* ``emp`` — empirical Fisher (Eq. 13): factor statistics are captured during
+  the *single* ordinary backward pass via the tagged sites (zero extra
+  passes; the paper's headline "practical" technique).
+* ``1mc`` — one-sample Monte-Carlo Fisher (Eq. 5): labels are *sampled* from
+  the model's predictive distribution and an extra backward pass computes the
+  statistics. Implemented for the ablation benchmark; it is strictly slower,
+  which is the paper's point.
+
+Normalization: tagged sites return RAW sums over local tokens. With the
+mean-over-samples loss, the properly scaled factors are
+
+    A  = raw_a / n_a                (n_a = #tokens that hit the site)
+    G  = raw_g * n_g                (n_g = #samples the loss averages over)
+    d  = raw_d * n_g                (diagonal Fisher, biases)
+    uw = raw_uw * n_g               (unit-wise 2x2 stats)
+    A_embed = raw_counts / n_a      (token frequency diagonal)
+
+because the per-sample log-likelihood gradient is ``n_loss * dL/ds`` and
+``n_loss == n_g``. For LM sites n_a == n_g == B*S; for conv sites n_a ==
+B*Ho*Wo while n_g == B (paper Eq. 11's 1/hw spatial normalization on A).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tagging import FactorSpec
+
+
+# ---------------------------------------------------------------------------
+# Site registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SiteInfo:
+    """Static metadata tying one tagged site to its parameter leaf.
+
+    ``param`` is a '/'-joined path into the params pytree. ``lead`` is the
+    leading axes shared by the factor arrays and the parameter (e.g. ``(L,)``
+    for scan-stacked layers, ``(L, E)`` for stacked MoE experts).
+    """
+    kind: str                      # dense | grouped | conv | embed | bias | scale_bias
+    param: str
+    d_in: int = 0
+    d_out: int = 0
+    spec: FactorSpec = FactorSpec()
+    lead: tuple = ()
+    ksize: int = 1                 # conv: spatial kernel (d_in = cin*k*k)
+    beta_param: Optional[str] = None   # scale_bias: path of the bias leaf
+
+
+def get_path(tree: Any, path: str) -> Any:
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def set_path(tree: dict, path: str, value: Any) -> dict:
+    """Functionally set ``path`` in a nested-dict pytree."""
+    parts = path.split("/")
+    def rec(node, i):
+        out = dict(node)
+        if i == len(parts) - 1:
+            out[parts[i]] = value
+        else:
+            out[parts[i]] = rec(node[parts[i]], i + 1)
+        return out
+    return rec(tree, 0)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def normalize_stats(raw: dict, infos: dict[str, SiteInfo],
+                    counts: dict[str, tuple]) -> dict:
+    """raw: {family: {"a"|"g"|"d"|"uw": raw sums}} -> scaled factors."""
+    out = {}
+    for fam, stats in raw.items():
+        n_a, n_g = counts[fam]
+        o = {}
+        for key, v in stats.items():
+            if key == "a":
+                o[key] = v / n_a
+            else:            # g, d, uw all scale by n_g
+                o[key] = v * n_g
+        out[fam] = o
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Gradient + statistics in one (emp) or two (1mc) backward passes
+# ---------------------------------------------------------------------------
+
+def emp_fisher_grads(loss_fn: Callable, params, fstats, batch):
+    """loss_fn(params, fstats, batch) -> (loss, aux). Single backward pass
+    computes grads AND raw factor sums (the paper's `emp` path)."""
+    (loss, aux), (g_params, g_stats) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1), has_aux=True)(params, fstats, batch)
+    return loss, aux, g_params, g_stats
+
+
+def mc_fisher_grads(loss_fn: Callable, params, fstats, batch, rng,
+                    label_key: str = "labels"):
+    """`1mc` estimator (Eq. 5): grads from the true labels, factor statistics
+    from one extra backward pass against labels sampled from p_theta.
+
+    ``aux`` must contain "logits" (pre-softmax, (..., V))."""
+    (loss, aux), g_params = jax.value_and_grad(
+        loss_fn, has_aux=True)(params, None, batch)
+    logits = aux["logits"]
+    sampled = jax.random.categorical(rng, logits.astype(jnp.float32), axis=-1)
+    batch_mc = dict(batch)
+    batch_mc[label_key] = sampled.reshape(batch[label_key].shape)
+    # extra backward pass, statistics only
+    g_stats = jax.grad(lambda fs: loss_fn(params, fs, batch_mc)[0])(fstats)
+    return loss, aux, g_params, g_stats

@@ -1,0 +1,250 @@
+"""Kronecker-factored curvature math (paper §3.3, §4).
+
+Conventions
+-----------
+* Weights are stored ``(d_in, d_out)``; a dense site computes ``y = x @ w``.
+* Tokens-as-samples empirical Fisher: with ``n`` the number of tokens that
+  flowed through a site, the Kronecker factors are
+
+      A = (1/n) sum_t a_t a_t^T          (input second moment)
+      G = (1/n) sum_t ghat_t ghat_t^T    (output log-likelihood grad 2nd moment)
+
+  where ``ghat = n * dL/ds`` undoes the mean-loss scaling, so
+  ``G_raw = sum_t (dL/ds)(dL/ds)^T`` relates as ``G = n * G_raw``.
+* The natural-gradient update for the site is ``U = A^-1 @ dW @ G^-1``
+  (``F = G (x) A`` for vec in our layout; Eq. 6/12 of the paper).
+* Large dimensions are split into diagonal blocks of at most ``max_dim``
+  ("block-diagonal factor capping", DESIGN.md §4) and every factor array
+  carries a leading block axis ``(nb, b, b)`` — possibly with further leading
+  layer / expert axes. All ops here broadcast over leading axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Block partitioning
+# ---------------------------------------------------------------------------
+
+def num_blocks(d: int, max_dim: int) -> int:
+    """Number of diagonal blocks a dimension of size ``d`` is split into."""
+    return max(1, -(-d // max_dim))
+
+
+def block_size(d: int, max_dim: int) -> int:
+    """Uniform (padded) block size used for a dimension of size ``d``."""
+    nb = num_blocks(d, max_dim)
+    return -(-d // nb)
+
+
+def padded_dim(d: int, max_dim: int) -> int:
+    return num_blocks(d, max_dim) * block_size(d, max_dim)
+
+
+def block_reshape(x: jax.Array, d: int, max_dim: int, axis: int = -1) -> jax.Array:
+    """Reshape ``axis`` (size d) into (nb, b), zero-padding to nb*b."""
+    nb = num_blocks(d, max_dim)
+    b = block_size(d, max_dim)
+    axis = axis % x.ndim
+    pad = nb * b - d
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    new_shape = x.shape[:axis] + (nb, b) + x.shape[axis + 1:]
+    return x.reshape(new_shape)
+
+
+def block_unreshape(x: jax.Array, d: int, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`block_reshape`: merge (nb, b) at ``axis`` back to d."""
+    axis = axis % x.ndim
+    nb, b = x.shape[axis], x.shape[axis + 1]
+    merged = x.reshape(x.shape[:axis] + (nb * b,) + x.shape[axis + 2:])
+    if nb * b != d:
+        merged = jax.lax.slice_in_dim(merged, 0, d, axis=axis)
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Factor statistics from token matrices
+# ---------------------------------------------------------------------------
+
+def factor_sum(x: jax.Array, max_dim: int) -> jax.Array:
+    """Blocked ``sum_t x_t x_t^T`` for a token matrix ``x`` of shape
+    (..., n, d). Returns (..., nb, b, b) in f32.
+
+    Inputs stay in their storage dtype (bf16 on TPU) with f32 accumulation —
+    the paper's mixed-precision Tensor-Core statistics construction (§5.2)
+    mapped to the MXU; it also halves any sharding-induced traffic on x."""
+    d = x.shape[-1]
+    xb = block_reshape(x, d, max_dim, axis=-1)
+    # (..., n, nb, b) -> (..., nb, b, b)
+    return jnp.einsum("...nka,...nkb->...kab", xb, xb,
+                      preferred_element_type=jnp.float32)
+
+
+def diag_factor_sum(x: jax.Array) -> jax.Array:
+    """``sum_t x_t^2`` per output coordinate. (..., n, d) -> (..., d)."""
+    x = x.astype(jnp.float32)
+    return jnp.sum(x * x, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Damping + inversion (Eq. 12)
+# ---------------------------------------------------------------------------
+
+def _block_trace(f: jax.Array) -> jax.Array:
+    """Trace summed over the block axis. f: (..., nb, b, b) -> (...,)."""
+    return jnp.trace(f, axis1=-2, axis2=-1).sum(-1)
+
+
+def pi_correction(a: jax.Array, g: jax.Array, d_a: int, d_g: int,
+                  eps: float = 1e-12) -> jax.Array:
+    """Martens-Grosse pi: sqrt(mean_eig(A) / mean_eig(G)) via traces.
+
+    ``a``: (..., nbA, bA, bA), ``g``: (..., nbG, bG, bG); returns (...,).
+    ``d_a``/``d_g`` are the true (unpadded) dimensions.
+    """
+    tr_a = _block_trace(a) / d_a
+    tr_g = _block_trace(g) / d_g
+    return jnp.sqrt(jnp.maximum(tr_a, eps) / jnp.maximum(tr_g, eps))
+
+
+def damped_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
+    """Inverse of SPD blocked factor ``f + damping*I``.
+
+    f: (..., nb, b, b); damping broadcastable to (...,). Uses eigh for
+    robustness (clamps negative eigenvalues that appear from bf16
+    accumulation)."""
+    b = f.shape[-1]
+    f = 0.5 * (f + jnp.swapaxes(f, -1, -2))  # re-symmetrize
+    vals, vecs = jnp.linalg.eigh(f)
+    d = jnp.asarray(damping)[..., None]  # broadcast over the eigenvalue axis
+    inv_vals = 1.0 / (jnp.maximum(vals, 0.0) + d)
+    return jnp.einsum("...ab,...b,...cb->...ac", vecs, inv_vals, vecs)
+
+
+def cholesky_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
+    """Cheaper inverse via Cholesky; requires f SPD after damping."""
+    b = f.shape[-1]
+    f = 0.5 * (f + jnp.swapaxes(f, -1, -2))
+    d = jnp.asarray(damping)[..., None, None]
+    eye = jnp.eye(b, dtype=f.dtype)
+    fd = f + d * eye
+    chol = jnp.linalg.cholesky(fd)
+    return jax.scipy.linalg.cho_solve((chol, True), jnp.broadcast_to(eye, fd.shape))
+
+
+def damped_factor_inverses(a: jax.Array, g: jax.Array, lam: float,
+                           d_a: int, d_g: int, *,
+                           method: str = "eigh") -> tuple[jax.Array, jax.Array]:
+    """Compute (A + pi*sqrt(lam) I)^-1 and (G + sqrt(lam)/pi I)^-1 (Eq. 12)."""
+    pi = pi_correction(a, g, d_a, d_g)
+    sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
+    inv = damped_inverse if method == "eigh" else cholesky_inverse
+    a_inv = inv(a, (pi * sl)[..., None])       # broadcast over block axis
+    g_inv = inv(g, (sl / pi)[..., None])
+    return a_inv, g_inv
+
+
+# ---------------------------------------------------------------------------
+# Preconditioning
+# ---------------------------------------------------------------------------
+
+def precondition(dw: jax.Array, a_inv: Optional[jax.Array],
+                 g_inv: Optional[jax.Array]) -> jax.Array:
+    """Apply ``U = A^-1 @ dW @ G^-1`` with blocked inverses.
+
+    dw: (..., d_in, d_out).
+    a_inv: (..., nbA, bA, bA) or (..., d_in) diagonal or None.
+    g_inv: (..., nbG, bG, bG) or (..., d_out) diagonal or None.
+    """
+    d_in, d_out = dw.shape[-2], dw.shape[-1]
+    u = dw.astype(jnp.float32)
+    if a_inv is not None:
+        if a_inv.ndim == dw.ndim - 1:          # diagonal over d_in
+            u = a_inv[..., :, None] * u
+        else:
+            ba = a_inv.shape[-1]
+            ub = block_reshape(u, d_in, ba, axis=-2)   # (..., nbA, bA, d_out)
+            ub = jnp.einsum("...kab,...kbo->...kao", a_inv, ub)
+            u = block_unreshape(ub, d_in, axis=-3)
+    if g_inv is not None:
+        if g_inv.ndim == dw.ndim - 1:          # diagonal over d_out
+            u = u * g_inv[..., None, :]
+        else:
+            bg = g_inv.shape[-1]
+            ub = block_reshape(u, d_out, bg, axis=-1)  # (..., d_in, nbG, bG)
+            ub = jnp.einsum("...iko,...kop->...ikp", ub, g_inv)
+            u = block_unreshape(ub, d_out, axis=-2)
+    return u.astype(dw.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unit-wise 2x2 inverse (Eq. 15-17) — used by scale/bias parameters
+# ---------------------------------------------------------------------------
+
+def unitwise_solve(stats: jax.Array, g_gamma: jax.Array, g_beta: jax.Array,
+                   lam: float) -> tuple[jax.Array, jax.Array]:
+    """Solve the per-channel 2x2 damped system (paper Eq. 16-17).
+
+    stats: (..., C, 3) rows [E[gg], E[gb], E[bb]] per channel.
+    g_gamma, g_beta: (..., C) gradients. Returns preconditioned grads.
+    """
+    aa = stats[..., 0] + lam
+    ab = stats[..., 1]
+    bb = stats[..., 2] + lam
+    det = aa * bb - ab * ab
+    det = jnp.where(det <= 1e-20, 1e-20, det)
+    ug = (bb * g_gamma - ab * g_beta) / det
+    ub = (-ab * g_gamma + aa * g_beta) / det
+    return ug, ub
+
+
+def diag_solve(stats: jax.Array, g: jax.Array, lam: float) -> jax.Array:
+    """1x1 unit-wise (diagonal Fisher) solve: g / (E[g^2] + lam)."""
+    return g / (stats + lam)
+
+
+# ---------------------------------------------------------------------------
+# Symmetry-aware packing (paper §5.2) — upper-triangular communication
+# ---------------------------------------------------------------------------
+
+def tril_indices(b: int) -> tuple[np.ndarray, np.ndarray]:
+    return np.tril_indices(b)
+
+
+def sym_pack(f: jax.Array) -> jax.Array:
+    """Pack symmetric (..., b, b) into (..., b(b+1)/2)."""
+    b = f.shape[-1]
+    i, j = np.tril_indices(b)
+    return f[..., i, j]
+
+
+def sym_unpack(p: jax.Array, b: int) -> jax.Array:
+    """Inverse of :func:`sym_pack`."""
+    i, j = np.tril_indices(b)
+    shape = p.shape[:-1] + (b, b)
+    f = jnp.zeros(shape, p.dtype).at[..., i, j].set(p)
+    ft = jnp.swapaxes(f, -1, -2)
+    diag = f * jnp.eye(b, dtype=p.dtype)
+    return f + ft - diag
+
+
+# ---------------------------------------------------------------------------
+# Frobenius similarity (Algorithm 2's predicate)
+# ---------------------------------------------------------------------------
+
+def frob_distance(x: jax.Array, y: jax.Array, eps: float = 1e-30) -> jax.Array:
+    """||x - y||_F / ||y||_F, computed over ALL axes (a whole factor family
+    is compared at once; DESIGN.md §"per-family refresh")."""
+    num = jnp.sqrt(jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2))
+    den = jnp.sqrt(jnp.sum(y.astype(jnp.float32) ** 2))
+    return num / jnp.maximum(den, eps)

@@ -1,0 +1,349 @@
+"""SP-NGD optimizer: the paper's update rule (Eq. 6/12/23/24) end to end.
+
+Decoupled from any model class: the constructor takes
+
+    loss_fn(params, fstats, batch) -> (loss, aux)
+    site_infos: {family: SiteInfo}
+    fstats_fn() -> zero statistics pytree (structure {family: {"a": ..., ...}})
+    counts_fn(batch) -> {family: (n_a, n_g)}
+
+Two jittable steps:
+
+* ``step``      — full step with curvature capture; per-statistic refresh
+                  flags gate the (communication + inversion) work via
+                  ``lax.cond`` (Algorithm 1's skip).
+* ``step_fast`` — no capture at all (every statistic within its interval):
+                  a plain backward + stale-preconditioned update. This is the
+                  path whose cost approaches SGD, the paper's headline claim.
+
+The caller drives refresh scheduling with ``stale.IntervalController``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kfac
+from repro.core.fisher import SiteInfo, emp_fisher_grads, mc_fisher_grads, get_path, set_path
+
+
+@dataclasses.dataclass(frozen=True)
+class NGDConfig:
+    damping: float = 2.5e-4          # paper Table 2 lambda
+    stale: bool = True
+    alpha: float = 0.1               # Frobenius similarity threshold
+    estimator: str = "emp"           # "emp" | "1mc"
+    inverse_method: str = "eigh"     # "eigh" | "cholesky"
+    factor_dtype: Any = jnp.float32  # storage dtype for X_-1/X_-2 history
+    weight_rescale: bool = False     # Eq. 24 (on for the conv/paper configs)
+    rescale_eps: float = 1e-9
+    history: int = 2                 # 2 = full Algorithm 2; 1 = cheap variant
+    sgd_fallback_scale: float = 1.0  # lr scale for non-sited params
+
+
+def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
+    """Average eigenvalue of a factor (full blocked or diagonal)."""
+    if kind == "full":
+        return jnp.trace(stat, axis1=-2, axis2=-1).sum(-1) / d
+    return stat.sum(-1) / d
+
+
+def _damped_inv(stat: jax.Array, kind: str, damp: jax.Array,
+                method: str) -> jax.Array:
+    """Apply-ready inverse: blocked matrix inverse or elementwise 1/(x+d)."""
+    if kind == "full":
+        inv = kfac.damped_inverse if method == "eigh" else kfac.cholesky_inverse
+        return inv(stat, damp[..., None])        # broadcast over block axis
+    return 1.0 / (jnp.maximum(stat, 0.0) + damp[..., None])
+
+
+class SPNGD:
+    def __init__(self, loss_fn: Callable, site_infos: dict[str, SiteInfo],
+                 fstats_fn: Callable, counts_fn: Callable,
+                 cfg: NGDConfig = NGDConfig(),
+                 sharding_hook: Optional[Callable] = None):
+        """``sharding_hook(family, stat_key, array) -> array`` lets the launch
+        layer pin factor arrays to the (data x model) mesh — this is where the
+        paper's Stage-3 ReduceScatterV materializes under GSPMD (DESIGN §7)."""
+        self.loss_fn = loss_fn
+        self.infos = site_infos
+        self.fstats_fn = fstats_fn
+        self.counts_fn = counts_fn
+        self.cfg = cfg
+        self.sharding_hook = sharding_hook or (lambda fam, key, x: x)
+
+    # ---- statistic naming for the interval controller ----
+
+    def stat_names(self) -> list[str]:
+        names = []
+        template = jax.eval_shape(self.fstats_fn)
+        for fam, stats in template.items():
+            for key in stats:
+                names.append(f"{fam}.{key}")
+        return sorted(names)
+
+    def stat_bytes(self, dtype_bytes: int = 4) -> dict[str, int]:
+        """Symmetric-packed communication payload per statistic (§5.2)."""
+        from repro.core.stale import sym_packed_bytes
+        template = jax.eval_shape(self.fstats_fn)
+        out = {}
+        for fam, stats in template.items():
+            for key, leaf in stats.items():
+                out[f"{fam}.{key}"] = sym_packed_bytes(leaf.shape, dtype_bytes)
+        return out
+
+    # ---- state ----
+
+    def init(self, params) -> dict:
+        template = jax.eval_shape(self.fstats_fn)
+        curv = {}
+        for fam, stats in template.items():
+            info = self.infos[fam]
+            entry = {"prev": {}, "prev2": {}, "precond": {}}
+            for key, leaf in stats.items():
+                z = jnp.zeros(leaf.shape, self.cfg.factor_dtype)
+                entry["prev"][key] = z
+                if self.cfg.history >= 2:
+                    entry["prev2"][key] = z
+                if key in ("a", "g"):
+                    kind = info.spec.a_kind if key == "a" else info.spec.g_kind
+                    if kind == "full":
+                        eye = jnp.broadcast_to(jnp.eye(leaf.shape[-1], dtype=jnp.float32),
+                                               leaf.shape)
+                        entry["precond"][key] = eye
+                    else:
+                        entry["precond"][key] = jnp.ones(leaf.shape, jnp.float32)
+                else:                       # "d" (bias) / "uw" (2x2): store stats
+                    entry["precond"][key] = jnp.zeros(leaf.shape, jnp.float32)
+            curv[fam] = entry
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "velocity": jax.tree.map(jnp.zeros_like, params),
+            "curv": curv,
+        }
+
+    # ---- curvature refresh (Algorithm 1's on-refresh work) ----
+
+    def _refresh_family(self, fam: str, raw: dict, curv: dict,
+                        flags: dict, lam, n_a, n_g):
+        info = self.infos[fam]
+        cfg = self.cfg
+        new_prev, new_prev2, sims = {}, {}, {}
+        normalized = {}
+        for key, v in raw.items():
+            norm = (v / n_a) if key == "a" else (v * n_g)
+            norm = self.sharding_hook(fam, key, norm)
+            flag = flags[f"{fam}.{key}"]
+            prev = curv["prev"][key].astype(jnp.float32)
+            # similarity of the *fresh* statistic vs history (Algorithm 2 input)
+            d1 = jnp.where(flag, kfac.frob_distance(norm, prev), -1.0)
+            if cfg.history >= 2:
+                prev2 = curv["prev2"][key].astype(jnp.float32)
+                d2 = jnp.where(flag, kfac.frob_distance(norm, prev2), -1.0)
+            else:
+                d2 = d1
+            sims[f"{fam}.{key}"] = jnp.stack([d1, d2])
+            # history shift happens only when refreshed
+            x = jnp.where(flag, norm, prev)
+            normalized[key] = x
+            new_prev[key] = x.astype(cfg.factor_dtype)
+            if cfg.history >= 2:
+                new_prev2[key] = jnp.where(flag, prev, prev2).astype(cfg.factor_dtype)
+
+        any_flag = functools.reduce(
+            jnp.logical_or, [flags[f"{fam}.{k}"] for k in raw], jnp.asarray(False))
+
+        def recompute(_):
+            pc = {}
+            if "a" in normalized or "g" in normalized:
+                a = normalized.get("a")
+                g = normalized.get("g")
+                if a is not None and g is not None:
+                    ea = _mean_eig(a, info.spec.a_kind, info.d_in)
+                    eg = _mean_eig(g, info.spec.g_kind, info.d_out)
+                    pi = jnp.sqrt(jnp.maximum(ea, 1e-12) / jnp.maximum(eg, 1e-12))
+                else:
+                    pi = jnp.ones(a.shape[:len(info.lead)] if a is not None
+                                  else g.shape[:len(info.lead)])
+                sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
+                if a is not None:
+                    pc["a"] = _damped_inv(a, info.spec.a_kind, pi * sl,
+                                          cfg.inverse_method)
+                if g is not None:
+                    pc["g"] = _damped_inv(g, info.spec.g_kind, sl / pi,
+                                          cfg.inverse_method)
+            for key in ("d", "uw"):
+                if key in normalized:
+                    pc[key] = normalized[key]
+            if "uwf" in normalized:
+                # full BN Fisher (2C x 2C): invert directly with lam damping
+                pc["uwf"] = kfac.damped_inverse(
+                    normalized["uwf"], jnp.asarray(lam, jnp.float32))
+            return pc
+
+        def keep(_):
+            return curv["precond"]
+
+        precond = jax.lax.cond(any_flag, recompute, keep, None)
+        out = {"prev": new_prev, "precond": precond}
+        if cfg.history >= 2:
+            out["prev2"] = new_prev2
+        else:
+            out["prev2"] = curv["prev2"]
+        return out, sims
+
+    # ---- preconditioned update for one family ----
+
+    def _apply_precond(self, fam: str, grads, curv: dict, lam):
+        info = self.infos[fam]
+        pc = curv["precond"]
+        if info.kind in ("dense", "grouped", "embed"):
+            dw = get_path(grads, info.param)
+            u = kfac.precondition(dw, pc.get("a"), pc.get("g"))
+            return {info.param: u}
+        if info.kind == "conv":
+            dw = get_path(grads, info.param)       # (kh, kw, cin, cout)
+            kh, kw, cin, cout = dw.shape[-4:]
+            lead = dw.shape[:-4]
+            d2 = jnp.transpose(dw, tuple(range(len(lead))) +
+                               tuple(len(lead) + i for i in (2, 0, 1, 3)))
+            d2 = d2.reshape(lead + (cin * kh * kw, cout))
+            u = kfac.precondition(d2, pc.get("a"), pc.get("g"))
+            u = u.reshape(lead + (cin, kh, kw, cout))
+            u = jnp.transpose(u, tuple(range(len(lead))) +
+                              tuple(len(lead) + i for i in (1, 2, 0, 3)))
+            return {info.param: u}
+        if info.kind == "bias":
+            g = get_path(grads, info.param)
+            return {info.param: kfac.diag_solve(pc["d"], g, lam)}
+        if info.kind == "scale_bias":
+            gg = get_path(grads, info.param)
+            if "uwf" in pc:                    # full BN Fisher baseline
+                gb = get_path(grads, info.beta_param)
+                gcat = jnp.concatenate([gg, gb], axis=-1)
+                u = jnp.einsum("...ab,...b->...a", pc["uwf"],
+                               gcat.astype(jnp.float32))
+                c = gg.shape[-1]
+                return {info.param: u[..., :c], info.beta_param: u[..., c:]}
+            if info.beta_param is not None:
+                gb = get_path(grads, info.beta_param)
+                ug, ub = kfac.unitwise_solve(pc["uw"], gg, gb, lam)
+                return {info.param: ug, info.beta_param: ub}
+            ug = kfac.diag_solve(pc["uw"][..., 0], gg, lam)
+            return {info.param: ug}
+        raise ValueError(info.kind)
+
+    # ---- full update assembly ----
+
+    def _finish(self, params, state, grads, curv, lam, lr, mom, loss, aux, sims):
+        cfg = self.cfg
+        # preconditioned updates for sited params
+        updates = {}
+        for fam, c in curv.items():
+            updates.update(self._apply_precond(fam, grads, c, lam))
+
+        sited = set(updates)
+
+        def leaf_update(path_str, g):
+            if path_str in updates:
+                return updates[path_str]
+            return g * cfg.sgd_fallback_scale     # non-sited: first-order
+
+        flat_g = _flatten_paths(grads)
+        flat_p = _flatten_paths(params)
+        flat_v = _flatten_paths(state["velocity"])
+        new_p, new_v = {}, {}
+        for path_str, g in flat_g.items():
+            u = leaf_update(path_str, g)
+            v = mom * flat_v[path_str] - lr * u.astype(flat_v[path_str].dtype)
+            w = flat_p[path_str] + v.astype(flat_p[path_str].dtype)
+            new_v[path_str] = v
+            new_p[path_str] = w
+
+        # Eq. 24 weight rescaling on dense/conv/grouped weights
+        if cfg.weight_rescale:
+            for fam, info in self.infos.items():
+                if info.kind in ("dense", "conv", "grouped"):
+                    w = new_p[info.param]
+                    naxes = 2 if info.kind in ("dense", "grouped") else 4
+                    axes = tuple(range(w.ndim - naxes, w.ndim))
+                    norm = jnp.sqrt(jnp.sum(w.astype(jnp.float32) ** 2, axis=axes,
+                                            keepdims=True))
+                    target = jnp.sqrt(2.0 * info.d_out)
+                    new_p[info.param] = (w * (target / (norm + cfg.rescale_eps))
+                                         ).astype(w.dtype)
+
+        params_out = _unflatten_paths(new_p, like=params)
+        vel_out = _unflatten_paths(new_v, like=params)
+        state_out = {"step": state["step"] + 1, "velocity": vel_out,
+                     "curv": curv}
+        metrics = {"loss": loss, "sims": sims}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items()
+                            if isinstance(v, jax.Array) and v.ndim == 0})
+        return params_out, state_out, metrics
+
+    def grads_and_raw(self, params, batch,
+                      rng: Optional[jax.Array] = None):
+        """One backward pass: (loss, aux, grads, raw factor sums). Exposed
+        separately so the launch layer can accumulate over microbatches —
+        the paper's own method for mimicking BS=65K/131K (§7.1)."""
+        fstats = self.fstats_fn()
+        if self.cfg.estimator == "1mc":
+            return mc_fisher_grads(self.loss_fn, params, fstats, batch, rng)
+        return emp_fisher_grads(self.loss_fn, params, fstats, batch)
+
+    def apply_update(self, params, state, grads, raw, counts, flags,
+                     lam, lr, mom, loss, aux):
+        """Refresh curvature from raw sums (per ``flags``) + apply Eq. 23."""
+        curv, sims = {}, {}
+        for fam in raw:
+            n_a, n_g = counts[fam]
+            curv[fam], s = self._refresh_family(
+                fam, raw[fam], state["curv"][fam], flags, lam, n_a, n_g)
+            sims.update(s)
+        return self._finish(params, state, grads, curv, lam, lr, mom,
+                            loss, aux, sims)
+
+    def step(self, params, state, batch, flags: dict, lam, lr, mom,
+             rng: Optional[jax.Array] = None):
+        """Full step with curvature capture. ``flags`` maps stat_name ->
+        bool (traced ok)."""
+        loss, aux, grads, raw = self.grads_and_raw(params, batch, rng)
+        counts = self.counts_fn(batch)
+        return self.apply_update(params, state, grads, raw, counts, flags,
+                                 lam, lr, mom, loss, aux)
+
+    def step_fast(self, params, state, batch, lam, lr, mom):
+        """No capture, no refresh: backward + stale-preconditioned update."""
+        (loss, aux), grads = jax.value_and_grad(
+            self.loss_fn, has_aux=True)(params, None, batch)
+        return self._finish(params, state, grads, state["curv"], lam, lr, mom,
+                            loss, aux, {})
+
+
+# ---------------------------------------------------------------------------
+# path-keyed flatten helpers (params are nested dicts)
+# ---------------------------------------------------------------------------
+
+def _flatten_paths(tree, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_paths(flat: dict, like) -> dict:
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{prefix}{k}/") for k, v in node.items()}
+        return flat[prefix[:-1]]
+    return rec(like, "")

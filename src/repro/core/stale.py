@@ -1,0 +1,120 @@
+"""Stale statistics with adaptive refresh intervals (paper §4.3, Alg. 1-2).
+
+Host-side controller: per *statistic* (each factor family's "a", "g", "d",
+"uw" array is one statistic X), track
+
+    t_X       next step at which X must be refreshed
+    delta     current acceptable interval
+    delta_m1  previous interval
+
+Algorithm 2, driven by Frobenius similarity measured on-device at refresh
+time (``sim1 = ||X - X_-1||_F/||X_-1||_F``, ``sim2`` vs ``X_-2``):
+
+    if   sim1 >= alpha:  delta <- max(1, floor(delta_m1 / 2))   # shrink
+    elif sim2 >= alpha:  delta <- delta_m1                      # hold
+    else:                delta <- delta_m1 + delta_m2           # Fibonacci grow
+
+The device side stores X_-1 / X_-2 inside the optimizer state and evaluates
+the two distances only on refresh steps (inside the ``lax.cond``); the
+controller consumes them after the step and schedules the next refresh.
+
+The controller also keeps the byte/flop ledger used by the paper's Table 2 /
+Fig. 6 communication-reduction benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class StatState:
+    t_next: int = 1          # Algorithm 1: t_X <- 1 initially
+    delta: int = 1
+    delta_m1: int = 1
+    bytes_per_refresh: int = 0   # symmetric-packed reduce-scatter payload
+    refresh_count: int = 0
+
+
+class IntervalController:
+    """Implements Algorithm 1's bookkeeping + Algorithm 2's interval rule."""
+
+    def __init__(self, stat_names: list[str], alpha: float = 0.1,
+                 max_interval: int = 0,
+                 bytes_per_stat: Optional[dict[str, int]] = None):
+        self.alpha = alpha
+        self.max_interval = max_interval          # 0 = unbounded (paper)
+        self.stats = {n: StatState() for n in stat_names}
+        if bytes_per_stat:
+            for n, b in bytes_per_stat.items():
+                self.stats[n].bytes_per_refresh = b
+        self.total_bytes = 0
+        self.dense_bytes = 0                      # what refresh-every-step would cost
+        self.steps = 0
+
+    def flags(self, t: int) -> dict[str, bool]:
+        """Which statistics must refresh at step t (Algorithm 1's t == t_X)."""
+        return {n: t >= s.t_next for n, s in self.stats.items()}
+
+    def update(self, t: int, flags: dict[str, bool],
+               sims: dict[str, tuple[float, float]]) -> None:
+        """Feed back measured similarities after the step ran.
+
+        sims[name] = (dist_to_prev, dist_to_prev2); entries for statistics
+        that did not refresh are ignored.
+        """
+        self.steps += 1
+        for name, st in self.stats.items():
+            self.dense_bytes += st.bytes_per_refresh
+            if not flags.get(name, False):
+                continue
+            d1, d2 = sims[name]
+            delta_m2 = st.delta_m1
+            delta_m1 = st.delta
+            # Algorithm 2
+            if d1 >= self.alpha:
+                delta = max(1, delta_m1 // 2)
+            elif d2 >= self.alpha:
+                delta = delta_m1
+            else:
+                delta = delta_m1 + delta_m2
+            if self.max_interval:
+                delta = min(delta, self.max_interval)
+            st.delta_m1 = delta_m1
+            st.delta = delta
+            st.t_next = t + delta
+            st.refresh_count += 1
+            self.total_bytes += st.bytes_per_refresh
+
+    # ---- reporting (paper Table 2 "reduction", Fig. 6) ----
+
+    def reduction_rate(self) -> float:
+        """Communicated bytes as a fraction of refresh-every-step bytes."""
+        if self.dense_bytes == 0:
+            return 1.0
+        return self.total_bytes / self.dense_bytes
+
+    def summary(self) -> dict:
+        return {
+            "steps": self.steps,
+            "total_stat_bytes": self.total_bytes,
+            "dense_stat_bytes": self.dense_bytes,
+            "reduction_rate": self.reduction_rate(),
+            "per_stat": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
+        }
+
+
+def sym_packed_bytes(shape: tuple, dtype_bytes: int = 4) -> int:
+    """Bytes for one symmetric-packed factor array (paper §5.2): the last two
+    axes (b, b) cost b(b+1)/2 each; leading axes multiply."""
+    if len(shape) >= 2 and shape[-1] == shape[-2]:
+        b = shape[-1]
+        lead = 1
+        for s in shape[:-2]:
+            lead *= s
+        return lead * (b * (b + 1) // 2) * dtype_bytes
+    n = 1
+    for s in shape:
+        n *= s
+    return n * dtype_bytes

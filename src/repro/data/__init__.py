@@ -1,0 +1,2 @@
+from repro.data.synthetic import token_batches, lm_batch
+from repro.data.augment import RunningMixup, random_erase

@@ -1,0 +1,65 @@
+"""Data augmentation from paper §6.1: running mixup + random erasing."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class RunningMixup:
+    """Paper Eq. 18-19: virtual samples are mixed from the *previous step's
+    virtual samples*, not just raw samples (stronger regularization than
+    vanilla mixup).
+
+        x~(t) = lam * x(t) + (1 - lam) * x~(t-1)
+        t~(t) = lam * t(t) + (1 - lam) * t~(t-1)
+
+    lam ~ Beta(alpha, alpha). Labels must be soft (one-hot / prob vectors).
+    """
+
+    def __init__(self, alpha: float, n_classes: int, seed: int = 0):
+        self.alpha = alpha
+        self.n_classes = n_classes
+        self.rng = np.random.RandomState(seed)
+        self.prev_x: Optional[jnp.ndarray] = None
+        self.prev_t: Optional[jnp.ndarray] = None
+
+    def __call__(self, images: jax.Array, labels: jax.Array) -> tuple:
+        soft = jax.nn.one_hot(labels, self.n_classes) \
+            if labels.ndim == 1 else labels
+        if self.prev_x is None:
+            self.prev_x, self.prev_t = images, soft
+            return images, soft
+        lam = float(self.rng.beta(self.alpha, self.alpha))
+        x = lam * images + (1 - lam) * self.prev_x
+        t = lam * soft + (1 - lam) * self.prev_t
+        self.prev_x, self.prev_t = x, t
+        return x, t
+
+
+def random_erase(rng: np.random.RandomState, images: np.ndarray, *,
+                 p: float = 0.5, area: tuple = (0.02, 0.25),
+                 aspect: tuple = (0.3, 1.0)) -> np.ndarray:
+    """Paper §6.1 Random Erasing *with zero value* (not random values);
+    erasing aspect ratio randomly switched (He, We) <-> (We, He)."""
+    out = np.array(images)
+    b, h, w, _ = out.shape
+    for i in range(b):
+        if rng.rand() >= p:
+            continue
+        se = rng.uniform(*area) * h * w
+        re = rng.uniform(*aspect)
+        he = int(round(np.sqrt(se * re)))
+        we = int(round(np.sqrt(se / re)))
+        if rng.rand() < 0.5:
+            he, we = we, he
+        he, we = min(he, h), min(we, w)
+        if he < 1 or we < 1:
+            continue
+        y0 = rng.randint(0, h - he + 1)
+        x0 = rng.randint(0, w - we + 1)
+        out[i, y0:y0 + he, x0:x0 + we, :] = 0.0
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.ops import kfac_factor, kfac_block_precond, swa_attention

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: symmetric rank-k factor construction  A = X^T X.
+
+This is the paper's statistics-construction hot-spot (§5.2 "the first
+hotspot is the construction of the statistics A, G") mapped to the TPU:
+
+* MXU-aligned (multiples of 128) VMEM tiles;
+* f32 accumulation from bf16 inputs (the paper's mixed-precision Tensor-Core
+  factor computation, §5.2);
+* symmetry-aware *compute*: only output tiles with i <= j are computed
+  (``pl.when`` guard); the wrapper mirrors the strict upper triangle. This
+  is the TPU analogue of the paper's symmetry-aware communication — applied
+  one level earlier, to the FLOPs themselves (~2x tile savings).
+
+Grid: (d/bm, d/bn, n/bk); the k axis accumulates into the (i, j) output
+tile, which Pallas keeps resident in VMEM across the k sweep (output revisit
+ordering), so each tile is written to HBM exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _factor_kernel(x_i_ref, x_j_ref, out_ref, *, n_k: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(i <= j)
+    def _accum():
+        xi = x_i_ref[...].astype(jnp.float32)      # (bk, bm)
+        xj = x_j_ref[...].astype(jnp.float32)      # (bk, bn)
+        out_ref[...] += jax.lax.dot_general(
+            xi, xj, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def factor_syrk(x: jax.Array, *, bm: int = 256, bn: int = 256,
+                bk: int = 512, interpret: bool = False) -> jax.Array:
+    """x: (n, d) -> lower-triangle-valid (d, d) f32 partial result.
+
+    Tiles with i > j are left zero; use ``ops.kfac_factor`` for the
+    mirrored symmetric result.
+    """
+    n, d = x.shape
+    bm = min(bm, d)
+    bn = min(bn, d)
+    bk = min(bk, n)
+    grid = (pl.cdiv(d, bm), pl.cdiv(d, bn), pl.cdiv(n, bk))
+
+    return pl.pallas_call(
+        functools.partial(_factor_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(x, x)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: batched block preconditioning  U[k] = Binv[k] @ W[k].
+
+The framework stores every Kronecker-factor inverse in *blocked* form
+(nb, b, b) (DESIGN.md §4), so applying ``A^-1 dW`` (and symmetrically
+``dW G^-1``) is a batch of (b x b) @ (b x m) products — one per diagonal
+block. This kernel keeps the accumulator tile in VMEM across the inner
+contraction sweep and accumulates in f32 regardless of input dtype.
+
+Grid: (nb, b/bm, m/bn, b/bk); dims 0..2 are parallel, dim 3 accumulates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _precond_kernel(binv_ref, w_ref, out_ref):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = binv_ref[...].astype(jnp.float32)      # (1, bm, bk)
+    w = w_ref[...].astype(jnp.float32)         # (1, bk, bn)
+    out_ref[...] += jax.lax.dot_general(
+        b[0], w[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]
+
+
+def block_precond(binv: jax.Array, w: jax.Array, *, bm: int = 256,
+                  bn: int = 256, bk: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """binv: (nb, b, b), w: (nb, b, m) -> (nb, b, m) f32."""
+    nb, b, _ = binv.shape
+    m = w.shape[-1]
+    bm_ = min(bm, b)
+    bn_ = min(bn, m)
+    bk_ = min(bk, b)
+    grid = (nb, pl.cdiv(b, bm_), pl.cdiv(m, bn_), pl.cdiv(b, bk_))
+
+    return pl.pallas_call(
+        _precond_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm_, bk_), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk_, bn_), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn_), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, b, m), jnp.float32),
+        interpret=interpret,
+    )(binv, w)

@@ -1,0 +1,80 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On this container (CPU) the kernels execute in ``interpret=True`` mode; on a
+real TPU set ``interpret=False`` (the default flips on backend detection).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kfac_factor as _factor
+from repro.kernels import kfac_precond as _precond
+from repro.kernels import swa_attention as _swa
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def kfac_factor(x: jax.Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """Symmetric factor A = X^T X (f32). The kernel fills only tiles with
+    tile_i <= tile_j (symmetry-aware compute, DESIGN.md §6); this wrapper
+    mirrors the strict-upper tiles and keeps diagonal tiles as computed."""
+    assert bm == bn, "diagonal tiles require square tiling"
+    interpret = _default_interpret() if interpret is None else interpret
+    n, d = x.shape
+    bt = min(bm, d)
+    bkk = min(bk, n)
+    dp = -(-d // bt) * bt
+    np_ = -(-n // bkk) * bkk
+    if dp != d or np_ != n:
+        x = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    m = _factor.factor_syrk(x, bm=bt, bn=bt, bk=bkk, interpret=interpret)
+    tr = jnp.arange(dp) // bt
+    upper = jnp.where(tr[:, None] < tr[None, :], m, 0.0)
+    diag = jnp.where(tr[:, None] == tr[None, :], m, 0.0)
+    return (upper + upper.T + diag)[:d, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def kfac_block_precond(binv: jax.Array, w: jax.Array, *, bm: int = 256,
+                       bn: int = 256, bk: int = 256,
+                       interpret: bool | None = None) -> jax.Array:
+    """Blocked preconditioner application U[k] = Binv[k] @ W[k]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    nb, b, _ = binv.shape
+    m = w.shape[-1]
+    bm_, bn_, bk_ = min(bm, b), min(bn, m), min(bk, b)
+    bp = -(-b // max(bm_, bk_)) * max(bm_, bk_)
+    mp = -(-m // bn_) * bn_
+    if bp != b or mp != m:
+        binv = jnp.pad(binv, ((0, 0), (0, bp - b), (0, bp - b)))
+        w = jnp.pad(w, ((0, 0), (0, bp - b), (0, mp - m)))
+    out = _precond.block_precond(binv, w, bm=bm_, bn=bn_, bk=bk_,
+                                 interpret=interpret)
+    return out[:, :b, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0, bq: int = 256, bk: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """Causal sliding-window flash attention; (BH, S, hd) layout."""
+    interpret = _default_interpret() if interpret is None else interpret
+    bh, s, hd = q.shape
+    bq_, bk_ = min(bq, s), min(bk, s)
+    bt = max(bq_, bk_)
+    sp = -(-s // bt) * bt
+    if sp != s:
+        pad = ((0, 0), (0, sp - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    out = _swa.swa_flash(q, k, v, window=window, bq=bq_, bk=bk_,
+                         interpret=interpret)
+    return out[:, :s, :]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kfac_factor_ref(x: jax.Array) -> jax.Array:
+    """A = X^T X in f32. x: (n, d) -> (d, d)."""
+    xf = x.astype(jnp.float32)
+    return xf.T @ xf
+
+
+def block_precond_ref(binv: jax.Array, w: jax.Array) -> jax.Array:
+    """U[k] = Binv[k] @ W[k]. (nb,b,b),(nb,b,m) -> (nb,b,m) f32."""
+    return jnp.einsum("kab,kbm->kam", binv.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window: int = 0) -> jax.Array:
+    """Causal (+ sliding window) attention. q,k,v: (BH, S, hd)."""
+    bh, s, hd = q.shape
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = kp <= qp
+    if window:
+        mask &= kp > (qp - window)
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

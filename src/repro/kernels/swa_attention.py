@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: sliding-window flash attention (causal, GQA-ready).
+
+Used by the long-context decode configs (long_500k) and Mixtral-style SWA.
+Online-softmax over KV tiles; out-of-window tiles are skipped via ``pl.when``
+so the compute is O(S * W) not O(S^2). Scratch (VMEM) carries the running
+(max, denom, accumulator) across the KV sweep for each query tile.
+
+Layout: q (BH, S, hd), k/v (BH, S, hd) — heads pre-flattened into the batch
+dim (GQA repeat happens in ops.py). Grid: (BH, S/bq, S/bk) with the KV axis
+innermost (accumulation axis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, d_ref, acc_ref, *,
+                bq: int, bk: int, window: int, n_k: int, seq_len: int,
+                scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile visibility: query rows [qi*bq, qi*bq+bq), keys [kj*bk, kj*bk+bk)
+    # causal: k <= q;  window: k > q - window
+    q_lo = qi * bq
+    q_hi = q_lo + bq - 1
+    k_lo = kj * bk
+    k_hi = k_lo + bk - 1
+    in_range = (k_lo <= q_hi)
+    if window:
+        # a key tile matters iff it intersects the band (q-window, q] for
+        # ANY query in the tile: k_hi > q_lo - window
+        in_range = jnp.logical_and(in_range, k_hi > q_lo - window)
+
+    @pl.when(in_range)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale       # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)               # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = (k_pos <= q_pos) & (k_pos < seq_len)
+        if window:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                            # (bq,)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        d_ref[...] = d_ref[...] * corr + p.sum(-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)[None]
+
+
+def swa_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
+              bq: int = 256, bk: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, hd) -> (BH, S, hd); causal (+ optional window)."""
+    bh, s, hd = q.shape
+    bq_ = min(bq, s)
+    bk_ = min(bk, s)
+    n_k = pl.cdiv(s, bk_)
+    grid = (bh, pl.cdiv(s, bq_), n_k)
+    scale = hd ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_swa_kernel, bq=bq_, bk=bk_, window=window,
+                          n_k=n_k, seq_len=s, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk_, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_,), jnp.float32),        # running max
+            pltpu.VMEM((bq_,), jnp.float32),        # running denominator
+            pltpu.VMEM((bq_, hd), jnp.float32),     # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,32 @@
+"""Production device meshes.
+
+Target hardware: TPU v5e pods — 256 chips/pod as a (data=16, model=16) mesh;
+the multi-pod configuration stacks a leading "pod" axis (2 pods = 512 chips).
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires xla_force_host_platform_device_count
+    >= data*model in the test process)."""
+    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes the global batch is sharded over."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

@@ -1,0 +1,322 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = collective_bytes / (chips * LINK_BW)
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — useless for
+scan-over-layers models where all the work is inside loops. We therefore
+analyze the optimized HLO text ourselves, walking the call graph from the
+entry computation and weighting each while body by its trip count (extracted
+from the integer constants in the loop condition):
+
+  * FLOPs: dot instructions (2 * numel(result) * contracted-dim product),
+    found at top level and inside fusion bodies;
+  * HBM bytes: per top-level instruction, parameter + result bytes of
+    fusions / dots / collectives / copies (fusion-interior ops don't touch
+    HBM);
+  * collective bytes: result-shape bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment). Both the trip-weighted numbers and the raw
+cost_analysis values are recorded so the correction is visible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_TYPES = "|".join(DTYPE_BYTES)
+_SHAPE_RE = re.compile(rf"\b({_TYPES})\[([\d,]*)\]")
+_DEF_RE = re.compile(rf"%?([\w.\-]+)\s*=\s*(\(?)(({_TYPES})\[[\d,]*\])")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(segment: str) -> int:
+    return sum(_numel(dims) * DTYPE_BYTES[dt]
+               for dt, dims in _SHAPE_RE.findall(segment))
+
+
+def _first_shape(segment: str):
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return None
+    return m.group(1), [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class HloComputation:
+    name: str
+    param_shapes: list          # [(dtype, dims), ...]
+    lines: list
+    defs: dict                  # instr name -> (dtype, dims)
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+
+def _parse_computations(hlo: str) -> tuple[dict, Optional[str]]:
+    comps: dict[str, HloComputation] = {}
+    cur: Optional[HloComputation] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->", line)
+        if m and line.endswith("{"):
+            params = []
+            for pm in _SHAPE_RE.finditer(m.group(3)):
+                params.append((pm.group(1),
+                               [int(d) for d in pm.group(2).split(",") if d]))
+            cur = HloComputation(m.group(2), params, [], {})
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+        elif line == "}":
+            cur = None
+        elif cur is not None and "=" in line:
+            cur.lines.append(line)
+            dm = _DEF_RE.match(line)
+            if dm:
+                fs = _first_shape(line.split("=", 1)[1])
+                if fs:
+                    cur.defs[dm.group(1)] = fs
+    return comps, entry
+
+
+def _operand_names(line: str) -> list[str]:
+    """Operand instruction names of the op call on this line."""
+    m = re.search(r"\w[\w\-]*\(([^)]*)\)", line.split("=", 1)[1])
+    if not m:
+        return []
+    names = re.findall(r"%([\w.\-]+)", m.group(1))
+    if not names:  # operands may be bare names without % in some dialects
+        names = [t.strip() for t in m.group(1).split(",")
+                 if t.strip() and "[" not in t]
+    return names
+
+
+def _dot_flops(line: str, comp: HloComputation) -> float:
+    """2 * numel(result) * contracted size for a dot instruction."""
+    out = _first_shape(line.split("=", 1)[1])
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    ops = _operand_names(line)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contracted = 1
+    if cm and ops:
+        lhs_shape = comp.defs.get(ops[0])
+        if lhs_shape is None and ops[0].startswith("param"):
+            lhs_shape = None
+        if lhs_shape:
+            for ci in cm.group(1).split(","):
+                if ci:
+                    idx = int(ci)
+                    if idx < len(lhs_shape[1]):
+                        contracted *= lhs_shape[1][idx]
+    # operand shapes may be printed inline:
+    if contracted == 1 and cm:
+        inline = _SHAPE_RE.findall(line.split("=", 1)[1])
+        if len(inline) >= 2:
+            lhs_dims = [int(d) for d in inline[1][1].split(",") if d]
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(lhs_dims):
+                    contracted *= lhs_dims[int(ci)]
+    return 2.0 * _numel(",".join(map(str, out_dims))) * contracted
+
+
+def _trip_count(comp: Optional[HloComputation]) -> int:
+    if comp is None:
+        return 1
+    best = 1
+    for ln in comp.lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_CALLED_RE = re.compile(
+    r"(?:calls=|body=|to_apply=)%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def analyze_hlo(hlo: str) -> HloAnalysis:
+    comps, entry = _parse_computations(hlo)
+    if entry is None:
+        for name in comps:
+            if name.startswith("main"):
+                entry = name
+                break
+        else:
+            entry = next(iter(comps), None)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = {k: 0.0 for k in _COLL_KINDS}
+    coll_count = {k: 0 for k in _COLL_KINDS}
+    _flop_cache: dict[str, float] = {}
+
+    def fusion_flops(comp_name: str) -> float:
+        """dot flops inside a fusion body (scale applied by caller)."""
+        if comp_name in _flop_cache:
+            return _flop_cache[comp_name]
+        comp = comps.get(comp_name)
+        total = 0.0
+        if comp:
+            for ln in comp.lines:
+                if re.search(r"=\s*\(?[\w\[\],{}]*\s*dot\(", ln) or " dot(" in ln:
+                    total += _dot_flops(ln, comp)
+                cm = _CALLED_RE.search(ln)
+                if cm and "while(" not in ln and cm.group(1) != comp_name:
+                    total += fusion_flops(cm.group(1))
+        _flop_cache[comp_name] = total
+        return total
+
+    def walk(comp_name: str, scale: float, depth: int = 0) -> None:
+        nonlocal flops, hbm
+        comp = comps.get(comp_name)
+        if comp is None or depth > 50:
+            return
+        for ln in comp.lines:
+            body = ln.split("=", 1)[1] if "=" in ln else ln
+            # collectives
+            matched_coll = False
+            for kind in _COLL_KINDS:
+                if re.search(rf"\b{kind}(-start)?\(", body) and "-done" not in body:
+                    b = _shape_bytes(ln.split(f" {kind}")[0])
+                    coll_bytes[kind] += b * scale
+                    coll_count[kind] += 1
+                    hbm += 2 * b * scale
+                    matched_coll = True
+            if matched_coll:
+                continue
+            # while loops: recurse with trip weighting
+            if " while(" in body:
+                called = dict(re.findall(r"(condition|body)=%?([\w.\-]+)", ln))
+                trips = _trip_count(comps.get(called.get("condition", "")))
+                if "body" in called:
+                    walk(called["body"], scale * trips, depth + 1)
+                continue
+            # conditionals
+            bm = _BRANCHES_RE.search(body)
+            if bm:
+                for br in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    walk(br, scale, depth + 1)
+                continue
+            # dots at top level
+            if " dot(" in body:
+                flops += _dot_flops(ln, comp) * scale
+                out_b = _shape_bytes(body.split(" dot(")[0])
+                in_b = sum(_shape_bytes("%s[%s]" % (comp.defs[o][0],
+                                                    ",".join(map(str, comp.defs[o][1]))))
+                           for o in _operand_names(ln) if o in comp.defs)
+                hbm += (out_b + in_b) * scale
+                continue
+            # fusions / calls: interior dot flops + boundary bytes
+            if " fusion(" in body or " call(" in body or "custom-call" in body:
+                cm = _CALLED_RE.search(ln)
+                if cm:
+                    flops += fusion_flops(cm.group(1)) * scale
+                    callee = comps.get(cm.group(1))
+                    if callee:
+                        in_b = sum(_numel(",".join(map(str, dims)))
+                                   * DTYPE_BYTES[dt]
+                                   for dt, dims in callee.param_shapes)
+                        out_b = _shape_bytes(ln.split(" fusion(")[0]
+                                             if " fusion(" in body
+                                             else ln.split("=", 1)[0] + "=" +
+                                             body.split("(", 1)[0])
+                        hbm += (in_b + out_b) * scale
+                continue
+            # other top-level materializing ops: result bytes
+            if re.search(r"\b(copy|broadcast|transpose|reshape|convert|"
+                         r"dynamic-update-slice|dynamic-slice|slice|pad|"
+                         r"concatenate|reduce|convolution|scatter|gather)\(",
+                         body):
+                if "convolution(" in body:
+                    # approximate conv flops: 2 * numel(out) * window elems
+                    out = _first_shape(body)
+                    win = re.search(r"window=\{size=([\dx]+)", body)
+                    k = 1
+                    if win:
+                        for t in win.group(1).split("x"):
+                            k *= int(t)
+                    if out:
+                        flops += 2.0 * _numel(",".join(map(str, out[1]))) \
+                            * k * scale
+                hbm += 2 * _shape_bytes(body.split("(", 1)[0]) * scale
+
+    if entry:
+        walk(entry, 1.0)
+    return HloAnalysis(flops, hbm,
+                       sum(coll_bytes.values()),
+                       {k: int(v) for k, v in coll_bytes.items()},
+                       coll_count)
+
+
+# legacy wrapper used by early dryrun revisions
+def collective_bytes_from_hlo(hlo: str):
+    a = analyze_hlo(hlo)
+
+    @dataclasses.dataclass
+    class CollectiveStats:
+        bytes_by_kind: dict
+        total_bytes: int
+        count_by_kind: dict
+
+    return CollectiveStats(a.bytes_by_kind, int(a.collective_bytes),
+                           a.count_by_kind)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   n_chips: int) -> dict:
+    compute = flops / (n_chips * PEAK_FLOPS)
+    memory = hbm_bytes / (n_chips * HBM_BW)
+    collective = coll_bytes / (n_chips * LINK_BW)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms
+
+
+def model_flops_train(n_params_active: float, n_tokens: float) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * n_tokens
+
+
+def model_flops_decode(n_params_active: float, n_tokens: float) -> float:
+    """2*N per generated token (one forward)."""
+    return 2.0 * n_params_active * n_tokens

@@ -1,0 +1,240 @@
+"""Sharding policy: maps every parameter / batch / cache / factor array onto
+the (pod, data, model) mesh.
+
+Policy (DESIGN.md §7):
+* batch dims shard over ("pod","data");
+* tensor-parallel: head/ff output dims over "model" (column-parallel up,
+  row-parallel down — Megatron-style pairing keeps one all-reduce per block);
+* large archs (d_model >= `fsdp_threshold`) additionally shard the weight
+  input dim over "data" (FSDP/ZeRO-style 2D sharding: XLA all-gathers
+  weights per layer on use);
+* K-FAC factor families shard their layer axis over the flattened
+  ("data","model") axes — the GSPMD realization of the paper's
+  ReduceScatterV -> model-parallel inversion (Stages 3-4);
+* optimizer state (velocity, curvature history) inherits the same specs.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def dp_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs by path pattern
+# ---------------------------------------------------------------------------
+
+def param_pspec(path: str, ndim: int, cfg: ArchConfig, *,
+                fsdp: bool) -> P:
+    """path: '/'-joined parameter path; leading (L,) axis handled by ndim."""
+    lead = (None,) * (ndim - 2)       # (L,) for blocks, () for top-level
+    d_in_axis = "data" if fsdp else None
+
+    def col(_=None):                  # (..., d_in, d_out): split d_out
+        return P(*lead, d_in_axis, "model")
+
+    def row(_=None):                  # (..., d_in, d_out): split d_in
+        return P(*lead, "model", d_in_axis)
+
+    p = path
+    if re.search(r"embed/table$", p):
+        return P(d_in_axis, "model")
+    if re.search(r"head/w$", p):
+        return P(d_in_axis, "model")
+    if re.search(r"proj/w$", p):
+        return P(None, "model")
+    if re.search(r"attn/(wq|wk|wv)$", p):
+        return col()
+    if re.search(r"attn/wo$", p):
+        return row()
+    if re.search(r"attn/(bq|bk|bv)$", p):
+        return P(*(None,) * (ndim - 1), "model")
+    if re.search(r"mlp/(up|gate)$|moe/sh_(up|gate)$|cm/wk$", p):
+        return col()
+    if re.search(r"mlp/down$|moe/sh_down$|cm/wv$", p):
+        return row()
+    if re.search(r"moe/router$", p):
+        return P(*lead, None, None)
+    if re.search(r"moe/we_(up|gate)$", p):   # (L, E, d, ff)
+        return P(None, None, d_in_axis, "model")
+    if re.search(r"moe/we_down$", p):        # (L, E, ff, d)
+        return P(None, None, "model", d_in_axis)
+    if re.search(r"ssm/in_proj$", p):
+        return col()
+    if re.search(r"ssm/(xdb|out_proj)$", p):
+        return row()
+    if re.search(r"ssm/dt_proj$", p):
+        return col()
+    if re.search(r"ssm/(conv_w|dt_bias|d_skip)$", p):
+        return P(*(None,) * (ndim - 1), "model")
+    if re.search(r"ssm/a_log$", p):
+        return P(*(None,) * (ndim - 2), "model", None)
+    if re.search(r"tm/(wr|wk|wv|wg)$|cm/wr$", p):
+        return col()
+    if re.search(r"tm/wo$", p):
+        return row()
+    if re.search(r"tm/w_lora_a$", p):
+        return P(*lead, None, None)
+    if re.search(r"tm/w_lora_b$", p):
+        return P(*lead, None, None)
+    return P()                        # norms, mu vectors, small leaves
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Drop axis assignments that don't divide the dimension (input
+    shardings require exact division; e.g. vocab=32001 can't go 16-way)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, parts):
+        if axes is None:
+            out.append(None)
+            continue
+        size = _mesh_size(mesh, axes if isinstance(axes, tuple) else (axes,))
+        out.append(axes if dim % size == 0 and dim >= size else None)
+    return P(*out)
+
+
+def params_pspecs(params_shape, cfg: ArchConfig, *, mesh=None,
+                  fsdp_threshold: int = 6144):
+    """Pytree of PartitionSpec matching a params eval_shape pytree."""
+    fsdp = cfg.d_model >= fsdp_threshold
+    from repro.core.ngd import _flatten_paths
+
+    flat = _flatten_paths(params_shape)
+    out = {}
+    for p, v in flat.items():
+        spec = param_pspec(p, len(v.shape), cfg, fsdp=fsdp)
+        if mesh is not None:
+            spec = _sanitize(spec, v.shape, mesh)
+        out[p] = spec
+    from repro.core.ngd import _unflatten_paths
+    return _unflatten_paths(out, like=params_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def _mesh_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _assign(shape, mesh, preferences) -> P:
+    """Build a spec by assigning each mesh-axis group to the first listed
+    dimension it divides evenly. ``preferences``: [(axes, [dim, ...]), ...]
+    in priority order. Input shardings must divide exactly (unlike
+    constraints), hence the fallback chain — e.g. long_500k has batch=1, so
+    the data axes land on the cache sequence dim instead."""
+    spec = [None] * len(shape)
+    for axes, dims in preferences:
+        size = _mesh_size(mesh, axes)
+        for d in dims:
+            if spec[d] is None and shape[d] % size == 0 and shape[d] >= size:
+                spec[d] = axes
+                break
+    return P(*spec)
+
+
+def batch_pspecs(batch_shape, mesh) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        if k == "cache":
+            out[k] = cache_pspecs(v, mesh)
+        elif hasattr(v, "shape") and len(v.shape) >= 2:
+            # (B, S, ...): batch over data, else sequence over data
+            out[k] = _assign(v.shape, mesh, [(dp, [0, 1])])
+        elif hasattr(v, "shape") and len(v.shape) == 1:
+            out[k] = _assign(v.shape, mesh, [(dp, [0])])
+        else:
+            out[k] = P()
+    return out
+
+
+def cache_pspecs(cache_shape, mesh) -> dict:
+    """KV cache (L, B, M, KV, hd): batch over data + heads over model when
+    divisible; otherwise the sequence dim M absorbs the axes (long_500k has
+    batch=1, GQA archs have KV < 16)."""
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in cache_shape.items():
+        s = v.shape
+        if k in ("k", "v"):                   # (L, B, M, KV, hd)
+            out[k] = _assign(s, mesh, [(dp, [1, 2]), (("model",), [3, 2, 4])])
+        elif k == "ssm_h":                    # (L, B, di, N)
+            out[k] = _assign(s, mesh, [(dp, [1, 2]), (("model",), [2])])
+        elif k == "conv":                     # (L, B, K, di)
+            out[k] = _assign(s, mesh, [(dp, [1, 3]), (("model",), [3])])
+        elif k == "wkv":                      # (L, B, h, hd, hd)
+            out[k] = _assign(s, mesh, [(dp, [1, 2]), (("model",), [2])])
+        elif k in ("tm_x", "cm_x"):           # (L, B, 1, d)
+            out[k] = _assign(s, mesh, [(dp, [1, 3]), (("model",), [3])])
+        elif k == "len":
+            out[k] = P()
+        else:
+            out[k] = P(*(None,) * len(s))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# K-FAC factor sharding hook (the Stage 3-4 scatter)
+# ---------------------------------------------------------------------------
+
+def _lead_axes(dim: int, mesh, exact: bool = False) -> tuple:
+    """Largest prefix of mesh axes whose total shard count fits ``dim``.
+    With ``exact=True`` the product must also divide ``dim`` (required for
+    input shardings; constraints tolerate uneven/padded sharding)."""
+    chosen = []
+    prod = 1
+    for a in mesh.axis_names:
+        nxt = prod * mesh.shape[a]
+        if nxt <= dim and (not exact or dim % nxt == 0):
+            chosen.append(a)
+            prod = nxt
+    return tuple(chosen)
+
+
+def factor_sharding_hook(mesh):
+    """Returns hook(family, stat_key, array): factor arrays with a leading
+    layer axis get scattered over the mesh axes flattened — each device then
+    inverts only its own layer-blocks (paper Stage 4)."""
+
+    def hook(fam, key, x):
+        if x.ndim < 1 or not fam.startswith("blk/"):
+            return x
+        axes = _lead_axes(x.shape[0], mesh)
+        if not axes:
+            return x
+        spec = P(axes, *(None,) * (x.ndim - 1))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return hook
+
+
+def opt_state_pspecs(opt_state_shape, params_specs, mesh):
+    """velocity: like params; curvature: layer axis over the mesh."""
+
+    def curv_spec(x):
+        if len(x.shape) >= 1:
+            axes = _lead_axes(x.shape[0], mesh, exact=True)
+            if axes:
+                return P(axes, *(None,) * (len(x.shape) - 1))
+        return P()
+
+    out = {"step": P(),
+           "velocity": params_specs,
+           "curv": jax.tree.map(curv_spec, opt_state_shape["curv"])}
+    return out

@@ -1,0 +1,2 @@
+from repro.models.transformer import DecoderLM
+from repro.models.resnet import ConvNet

@@ -1,0 +1,107 @@
+"""GQA attention with chunked (flash-style) online softmax, sliding-window
+support, and a KV-cache decode path.
+
+The chunked implementation never materializes the (Sq, Sk) score matrix —
+it scans KV chunks with a running (max, denominator, accumulator) triple.
+This is the pure-JAX reference; ``repro.kernels.swa_attention`` is the Pallas
+TPU kernel for the same contraction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                            ).reshape(b, s, kv * n_rep, hd)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, q_offset=0,
+              kv_len: Optional[jax.Array] = None,
+              chunk: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: number of valid cache entries (decode with a fixed-size
+    cache); None = all of Sk.
+    ``window``: sliding-window size (0 = full); key j is visible to query i
+    iff  i - window < j <= i  (Mixtral-style).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scale = hd ** -0.5
+    qf = (q * scale).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        m, denom, acc = carry
+        kj, vj, j0 = xs
+        # scores: (B, H, Sq, C)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kj.astype(jnp.float32))
+        k_pos = j0 + jnp.arange(chunk)
+        valid = k_pos[None, :] < (kv_len if kv_len is not None else sk)
+        if causal:
+            vis = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                vis &= k_pos[None, :] > (q_pos[:, None] - window)
+            valid = valid & vis
+        s = jnp.where(valid[None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        denom = denom * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, denom, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    d0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+    j0s = jnp.arange(n_chunks) * chunk
+    (m, denom, acc), _ = jax.lax.scan(body, (m0, d0, a0), (kc, vc, j0s))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention_naive(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_len=None):
+    """Reference O(Sq*Sk) materialized-scores attention (oracle for tests)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    valid = k_pos[None, :] < (kv_len if kv_len is not None else sk)
+    if causal:
+        vis = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            vis &= k_pos[None, :] > (q_pos[:, None] - window)
+        valid = valid & vis
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

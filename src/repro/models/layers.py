@@ -1,0 +1,74 @@
+"""Shared building blocks: norms, rotary embeddings, initializers."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tagging
+
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in: Optional[int] = None):
+    """HeNormal (paper §7 uses Chainer's HeNormal default)."""
+    fi = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (2.0 / fi) ** 0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, stats: Optional[dict],
+            eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with the scale tagged unit-wise (1x1 Fisher), mirroring the
+    paper's unit-wise treatment of normalization parameters."""
+    xf = x.astype(jnp.float32)
+    xhat = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    xhat = xhat.astype(x.dtype)
+    return tagging.scale_bias_site(xhat, gamma.astype(x.dtype), None, stats)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              stats: Optional[dict], eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xhat = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return tagging.scale_bias_site(xhat, gamma.astype(x.dtype),
+                                   beta.astype(x.dtype), stats)
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if ang.ndim == 2:                                   # (S, hd/2) -> broadcast B, H
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                                               # (B, S, hd/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    x1, x2 = x[..., ::2].astype(jnp.float32), x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                                  # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)

@@ -1,0 +1,38 @@
+"""Feed-forward blocks (gated SiLU / plain GELU / squared-ReLU)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tagging
+from repro.models.layers import activation
+
+
+def mlp(x: jax.Array, p: dict, fs: Optional[dict], *, act: str = "silu",
+        gated: bool = True, spec=None, specs: Optional[dict] = None
+        ) -> jax.Array:
+    """fs keys (when tagging): "up", "gate", "down"."""
+    g = lambda name: (fs.get(name) if fs else None)
+    sp = lambda name: ((specs or {}).get(name) or spec
+                       or tagging.FactorSpec())
+    f = activation(act)
+    up = tagging.dense_site(x, p["up"], g("up"), sp("up"))
+    if gated:
+        gate = tagging.dense_site(x, p["gate"], g("gate"), sp("gate"))
+        h = f(gate) * up
+    else:
+        h = f(up)
+    return tagging.dense_site(h, p["down"], g("down"), sp("down"))
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    from repro.models.layers import he_normal
+    ks = jax.random.split(key, 3)
+    p = {"up": he_normal(ks[0], (d_model, d_ff), dtype),
+         "down": he_normal(ks[1], (d_ff, d_model), dtype)}
+    if gated:
+        p["gate"] = he_normal(ks[2], (d_model, d_ff), dtype)
+    return p

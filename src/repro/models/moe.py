@@ -1,0 +1,131 @@
+"""Mixture-of-Experts block with capacity-based dispatch and per-expert
+Kronecker factors.
+
+The paper's technique extends to MoE as per DESIGN.md §5: every expert's
+matmuls are `grouped_dense_site`s whose factor arrays carry the expert axis,
+so the distributed schedule reduce-scatters (L, E, nb, b, b) factor families
+and each device inverts the expert-blocks it owns. The router is a plain
+dense site. Near-empty experts produce near-zero factors; the Tikhonov
+damping floor keeps their inverses bounded (noted in DESIGN.md).
+
+Dispatch is the standard top-k + capacity scheme (tokens above capacity are
+dropped; the residual path carries them unchanged), implemented with scatter/
+gather so it shards cleanly over the data axis under pjit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tagging
+from repro.models.layers import activation, he_normal
+
+
+def router_probs(x2d, w_router, fs, n_experts: int, top_k: int, spec):
+    """Returns (topk_probs (T, k), topk_idx (T, k), aux_loss scalar)."""
+    logits = tagging.dense_site(x2d, w_router, fs, spec).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, top_k)
+    topk_probs = topk_probs / jnp.maximum(topk_probs.sum(-1, keepdims=True),
+                                          1e-9)
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(0)                                   # mean router prob
+    one_hot = jax.nn.one_hot(topk_idx[:, 0], n_experts)  # top-1 assignment
+    ce = one_hot.mean(0)                                 # fraction routed
+    aux = n_experts * jnp.sum(me * ce)
+    return topk_probs, topk_idx, aux
+
+
+def dispatch_combine(x2d, topk_probs, topk_idx, n_experts: int,
+                     capacity: int, expert_fn, buf_hook=None):
+    """Scatter tokens to (E, C, d), run expert_fn, gather back weighted.
+
+    ``buf_hook`` (optional): sharding-constraint callback applied to the
+    dispatch buffer — pins (E, C, d) to the TP layout so the scatter/gather
+    stay shard-local (EXPERIMENTS.md §Perf mixtral iteration 2)."""
+    t, d = x2d.shape
+    k = topk_idx.shape[1]
+    # position of each (token, k) assignment within its expert's buffer
+    flat_idx = topk_idx.reshape(-1)                      # (T*k,)
+    one_hot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(one_hot, axis=0) * one_hot - 1      # (T*k, E)
+    pos_in_e = pos.max(-1)                               # (T*k,)
+    keep = pos_in_e < capacity
+    safe_pos = jnp.where(keep, pos_in_e, capacity - 1)
+
+    buf = jnp.zeros((n_experts, capacity, d), x2d.dtype)
+    xk = jnp.repeat(x2d, k, axis=0)                      # token order: t0k0 t0k1 ...
+    buf = buf.at[flat_idx, safe_pos].add(
+        jnp.where(keep[:, None], xk, 0).astype(x2d.dtype))
+    if buf_hook is not None:
+        buf = buf_hook(buf)
+
+    out_e = expert_fn(buf)                               # (E, C, d_out)
+
+    gathered = out_e[flat_idx, safe_pos]                 # (T*k, d_out)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = topk_probs.reshape(-1)[:, None].astype(gathered.dtype)
+    combined = (gathered * w).reshape(t, k, -1).sum(1)
+    return combined
+
+
+def moe_block(x: jax.Array, p: dict, fs: Optional[dict], *,
+              n_experts: int, top_k: int, act: str = "silu",
+              capacity_factor: float = 1.25, spec=None,
+              specs: Optional[dict] = None, buf_hook=None,
+              shared_act: str = "silu") -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d). Returns (y, aux_loss). Param keys:
+    router (d, E); we_up/we_gate/we_down (E, d, f)/(E, f, d);
+    optional shared: sh_up, sh_gate, sh_down."""
+    b, s, d = x.shape
+    spec = spec or tagging.FactorSpec()
+    sp = lambda name: ((specs or {}).get(name) or spec)
+    g = lambda name: (fs.get(name) if fs else None)
+    x2d = x.reshape(-1, d)
+    t = x2d.shape[0]
+    capacity = max(1, int(capacity_factor * t * top_k / n_experts))
+
+    probs, idx, aux = router_probs(x2d, p["router"], g("router"),
+                                   n_experts, top_k, sp("router"))
+    f = activation(act)
+
+    def experts(buf):                                    # (E, C, d)
+        up = tagging.grouped_dense_site(buf, p["we_up"], g("we_up"),
+                                        sp("we_up"))
+        gate = tagging.grouped_dense_site(buf, p["we_gate"], g("we_gate"),
+                                          sp("we_gate"))
+        h = f(gate) * up
+        return tagging.grouped_dense_site(h, p["we_down"], g("we_down"),
+                                          sp("we_down"))
+
+    y = dispatch_combine(x2d, probs, idx, n_experts, capacity, experts,
+                         buf_hook=buf_hook)
+
+    if "sh_up" in p:                                     # always-on shared experts
+        from repro.models.mlp import mlp
+        y = y + mlp(x2d, {"up": p["sh_up"], "gate": p["sh_gate"],
+                          "down": p["sh_down"]},
+                    {"up": g("sh_up"), "gate": g("sh_gate"),
+                     "down": g("sh_down")} if fs else None,
+                    act=shared_act, gated=True, spec=spec,
+                    specs={"up": sp("sh_up"), "gate": sp("sh_gate"),
+                           "down": sp("sh_down")})
+    return y.reshape(b, s, d), aux
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    p = {"router": he_normal(ks[0], (d_model, n_experts), dtype),
+         "we_up": he_normal(ks[1], (n_experts, d_model, d_ff), dtype),
+         "we_gate": he_normal(ks[2], (n_experts, d_model, d_ff), dtype),
+         "we_down": he_normal(ks[3], (n_experts, d_ff, d_model), dtype)}
+    if n_shared:
+        sf = n_shared * d_ff
+        p["sh_up"] = he_normal(ks[4], (d_model, sf), dtype)
+        p["sh_gate"] = he_normal(ks[5], (d_model, sf), dtype)
+        p["sh_down"] = he_normal(ks[6], (sf, d_model), dtype)
+    return p

@@ -1,0 +1,189 @@
+"""RWKV-6 ("Finch") blocks: attention-free time-mix with data-dependent
+per-channel decay + squared-ReLU channel-mix. [arXiv:2404.05892]
+
+K-FAC coverage: the r/k/v/g/o and channel-mix matmuls are dense sites; the
+token-shift interpolation vectors (mu_*) are scale-like elementwise
+parameters tagged unit-wise (1x1); decay base w0 and bonus u take the
+first-order fallback (DESIGN.md §5).
+
+State per layer: (last_x_tm, last_x_cm, wkv_state (B, H, hd, hd)) — O(1) in
+sequence length, so the long_500k decode shape runs natively.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tagging
+from repro.models.layers import he_normal
+
+
+def init_rwkv_tm(key, d: int, head_dim: int, dtype, lora_r: int = 32) -> dict:
+    ks = jax.random.split(key, 9)
+    h = d // head_dim
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": he_normal(ks[0], (d, d), dtype), "wk": he_normal(ks[1], (d, d), dtype),
+        "wv": he_normal(ks[2], (d, d), dtype), "wg": he_normal(ks[3], (d, d), dtype),
+        "wo": he_normal(ks[4], (d, d), dtype),
+        "w0": jnp.zeros((d,), jnp.float32),
+        "w_lora_a": he_normal(ks[5], (d, lora_r), dtype),
+        "w_lora_b": (jax.random.normal(ks[6], (lora_r, d)) * 0.01).astype(dtype),
+        "u_bonus": jnp.zeros((h, head_dim), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_rwkv_cm(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype), "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": he_normal(ks[0], (d, d_ff), dtype),
+        "wv": he_normal(ks[1], (d_ff, d), dtype),
+        "wr": he_normal(ks[2], (d, d), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """x: (B, S, d). Returns (x_prev, new_last)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return prev, x[:, -1:]
+
+
+def _lerp(x, prev, mu, fs_key, fs):
+    """RWKV token-shift interpolation x + (prev - x) * mu, mu tagged 1x1."""
+    delta = prev - x
+    scaled = tagging.scale_bias_site(delta, mu, None,
+                                     fs.get(fs_key) if fs else None)
+    return x + scaled
+
+
+def _wkv_step(st, rt, kt, vt, wt, u):
+    """One WKV-6 recurrence step. st: (B, h, hd, hd); others (B, h, hd)."""
+    kv = kt[..., :, None] * vt[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", rt, st + u[..., None] * kv)
+    st = wt[..., None] * st + kv
+    return st, out
+
+
+def _wkv_scan(rh, kh, vh, wh, u, st0, *, chunk: int = 0):
+    """WKV recurrence over (B, S, h, hd) inputs.
+
+    ``chunk > 1``: scan over S/chunk super-steps with the inner ``chunk``
+    iterations unrolled — the (B, h, hd, hd) state and the per-token kv outer
+    products then live in VMEM/registers inside one fused loop body instead
+    of round-tripping HBM every token (TPU adaptation; EXPERIMENTS.md §Perf
+    rwkv iteration). Numerically identical to the per-token scan.
+    """
+    b, s, h, hd = rh.shape
+    if chunk and chunk > 1 and s % chunk == 0 and s > chunk:
+        n = s // chunk
+        xs = tuple(a.reshape(b, n, chunk, h, hd).swapaxes(0, 1)
+                   for a in (rh, kh, vh, wh))
+
+        @jax.checkpoint                           # recompute in-chunk states
+        def outer(st, inp):                       # in bwd: O(S/chunk) state
+            rc, kc, vc, wc = inp                  # (B, chunk, h, hd) memory
+            outs = []
+            for i in range(chunk):                # unrolled on purpose
+                st, out = _wkv_step(st, rc[:, i], kc[:, i], vc[:, i],
+                                    wc[:, i], u)
+                outs.append(out)
+            return st, jnp.stack(outs, axis=1)
+
+        st_final, ys = jax.lax.scan(outer, st0, xs)
+        return st_final, ys.swapaxes(0, 1).reshape(b, s, h, hd)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp
+        return _wkv_step(st, rt, kt, vt, wt, u)
+
+    xs = tuple(a.swapaxes(0, 1) for a in (rh, kh, vh, wh))
+    st_final, outs = jax.lax.scan(step, st0, xs)
+    return st_final, outs.swapaxes(0, 1)
+
+
+def time_mix(x: jax.Array, p: dict, fs: Optional[dict], *, head_dim: int,
+             spec=None, specs: Optional[dict] = None,
+             last_x: Optional[jax.Array] = None,
+             wkv_state: Optional[jax.Array] = None,
+             chunk: int = 0,
+             return_state: bool = False):
+    """RWKV-6 time mixing. x: (B, S, d)."""
+    spec = spec or tagging.FactorSpec()
+    sp = lambda n: ((specs or {}).get(n) or spec)
+    b, s, d = x.shape
+    h = d // head_dim
+    g = lambda n: (fs.get(n) if fs else None)
+    prev, new_last = _token_shift(x, last_x)
+
+    xr = _lerp(x, prev, p["mu_r"], "mu_r", fs)
+    xk = _lerp(x, prev, p["mu_k"], "mu_k", fs)
+    xv = _lerp(x, prev, p["mu_v"], "mu_v", fs)
+    xw = _lerp(x, prev, p["mu_w"], "mu_w", fs)
+    xg = _lerp(x, prev, p["mu_g"], "mu_g", fs)
+
+    r = tagging.dense_site(xr, p["wr"], g("wr"), sp("wr"))
+    k = tagging.dense_site(xk, p["wk"], g("wk"), sp("wk"))
+    v = tagging.dense_site(xv, p["wv"], g("wv"), sp("wv"))
+    gate = jax.nn.silu(tagging.dense_site(xg, p["wg"], g("wg"), sp("wg")))
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    lora = tagging.dense_site(jnp.tanh(
+        tagging.dense_site(xw, p["w_lora_a"], g("w_lora_a"), sp("w_lora_a"))),
+        p["w_lora_b"], g("w_lora_b"), sp("w_lora_b"))
+    logw = p["w0"] + lora.astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw))                          # (B, S, d) in (0,1)
+
+    rh = r.reshape(b, s, h, head_dim).astype(jnp.float32)
+    kh = k.reshape(b, s, h, head_dim).astype(jnp.float32)
+    vh = v.reshape(b, s, h, head_dim).astype(jnp.float32)
+    wh = w.reshape(b, s, h, head_dim)
+    u = p["u_bonus"]                                     # (h, hd)
+
+    st0 = wkv_state if wkv_state is not None else jnp.zeros(
+        (b, h, head_dim, head_dim), jnp.float32)
+
+    st_final, y = _wkv_scan(rh, kh, vh, wh, u, st0, chunk=chunk)
+    y = y.reshape(b, s, d)
+
+    # per-head group norm, scale tagged unit-wise
+    yh = y.reshape(b, s, h, head_dim)
+    mu_ = yh.mean(-1, keepdims=True)
+    var = ((yh - mu_) ** 2).mean(-1, keepdims=True)
+    yh = (yh - mu_) * jax.lax.rsqrt(var + 1e-5)
+    y = tagging.scale_bias_site(yh.reshape(b, s, d).astype(x.dtype),
+                                p["ln_scale"].astype(x.dtype), None,
+                                g("ln_scale"))
+    y = y * gate.astype(y.dtype)
+    out = tagging.dense_site(y, p["wo"], g("wo"), sp("wo"))
+    if return_state:
+        return out, (new_last, st_final)
+    return out
+
+
+def channel_mix(x: jax.Array, p: dict, fs: Optional[dict], *, spec=None,
+                specs: Optional[dict] = None,
+                last_x: Optional[jax.Array] = None,
+                return_state: bool = False):
+    spec = spec or tagging.FactorSpec()
+    sp = lambda n: ((specs or {}).get(n) or spec)
+    g = lambda n: (fs.get(n) if fs else None)
+    prev, new_last = _token_shift(x, last_x)
+    xk = _lerp(x, prev, p["mu_k"], "cm_mu_k", fs)
+    xr = _lerp(x, prev, p["mu_r"], "cm_mu_r", fs)
+    k = tagging.dense_site(xk, p["wk"], g("wk"), sp("wk"))
+    k = jnp.square(jax.nn.relu(k))
+    kv = tagging.dense_site(k, p["wv"], g("wv"), sp("wv"))
+    r = jax.nn.sigmoid(tagging.dense_site(xr, p["wr"], g("wr"), sp("wr")))
+    out = r * kv
+    if return_state:
+        return out, new_last
+    return out

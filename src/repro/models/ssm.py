@@ -1,0 +1,137 @@
+"""Selective SSM (Mamba-style) branch used by the hymba hybrid blocks.
+
+K-FAC applicability (DESIGN.md §5): the in/out/dt/BC projections are dense
+sites; the recurrence parameters (A_log, D, conv kernel, dt bias) are
+elementwise/depthwise and have no Kronecker product structure — they take
+the first-order fallback, the same decision the paper makes for its
+non-factorable parameters (BatchNorm) before inventing unit-wise NGD.
+
+The recurrence is a sequential ``lax.scan`` over time (state carried, O(1)
+memory in S — this is what makes the ``long_500k`` decode shape feasible).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tagging
+from repro.models.layers import he_normal
+
+
+def init_ssm(key, d_model: int, state: int, dtype,
+             expand: int = 2, dt_rank: Optional[int] = None,
+             conv_k: int = 4) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": he_normal(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_k, d_inner)) * 0.1
+                   ).astype(dtype),
+        "xdb": he_normal(ks[2], (d_inner, dt_rank + 2 * state), dtype),
+        "dt_proj": he_normal(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, state + 1, dtype=jnp.float32), (d_inner, state))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": he_normal(ks[4], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           cache: Optional[jax.Array] = None):
+    """x: (B, S, C), w: (K, C). Returns (y, new_cache[(B, K-1, C)])."""
+    k = w.shape[0]
+    hist = cache if cache is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([hist, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_cache = xx[:, -(k - 1):, :] if k > 1 else hist
+    return y, new_cache
+
+
+def _ssm_params(x_in, p, fs, spec, state):
+    """Shared projections: returns (x_conv_in, z, dt, B, C)."""
+    g = lambda n: (fs.get(n) if fs else None)
+    xz = tagging.dense_site(x_in, p["in_proj"], g("in_proj"), spec)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z
+
+
+def _dt_bc(x, p, fs, spec, state):
+    spec_xdb, spec_dt = spec if isinstance(spec, tuple) else (spec, spec)
+    g = lambda n: (fs.get(n) if fs else None)
+    dt_rank = p["dt_proj"].shape[0]
+    xdb = tagging.dense_site(x, p["xdb"], g("xdb"), spec_xdb)
+    dt_low = xdb[..., :dt_rank]
+    bmat = xdb[..., dt_rank:dt_rank + state]
+    cmat = xdb[..., dt_rank + state:]
+    dt = tagging.dense_site(dt_low, p["dt_proj"], g("dt_proj"), spec_dt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def ssm_branch(x_seq: jax.Array, p: dict, fs: Optional[dict], *,
+               state: int, spec=None, specs: Optional[dict] = None,
+               init_state: Optional[jax.Array] = None,
+               conv_cache: Optional[jax.Array] = None,
+               chunk: int = 0,
+               return_state: bool = False):
+    """x_seq: (B, S, d_model) -> (B, S, d_model) [+ (ssm_state, conv_cache)].
+
+    ``init_state``: (B, d_inner, state) carried SSM state (decode).
+    """
+    spec = spec or tagging.FactorSpec()
+    sp = lambda n: ((specs or {}).get(n) or spec)
+    b, s, d = x_seq.shape
+    x, z = _ssm_params(x_seq, p, fs, sp("in_proj"), state)
+    x, new_conv = _causal_depthwise_conv(x, p["conv_w"], conv_cache)
+    x = jax.nn.silu(x)
+    dt, bmat, cmat = _dt_bc(x, p, fs, (sp("xdb"), sp("dt_proj")), state)      # (B,S,di),(B,S,N),(B,S,N)
+    a = -jnp.exp(p["a_log"])                            # (di, N)
+    xf = x.astype(jnp.float32)
+
+    h0 = init_state if init_state is not None else jnp.zeros(
+        (b, x.shape[-1], state), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                           # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dtt[..., None] * a)                # (B, di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        yt = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, yt
+
+    if chunk and chunk > 1 and s % chunk == 0 and s > chunk:
+        # chunk-unrolled scan: the (B, di, N) state stays on-chip for
+        # ``chunk`` tokens instead of round-tripping HBM per token
+        n = s // chunk
+
+        @jax.checkpoint                                 # recompute in-chunk
+        def outer(h, inp):                              # states in backward
+            xc, dc, bc, cc = inp                        # (B, chunk, ...)
+            outs = []
+            for i in range(chunk):
+                h, yt = step(h, (xc[:, i], dc[:, i], bc[:, i], cc[:, i]))
+                outs.append(yt)
+            return h, jnp.stack(outs, axis=1)
+
+        xs = tuple(v.reshape((b, n, chunk) + v.shape[2:]).swapaxes(0, 1)
+                   for v in (xf, dt, bmat, cmat))
+        h_final, ys = jax.lax.scan(outer, h0, xs)
+        ys = ys.swapaxes(0, 1).reshape(b, s, -1)
+    else:
+        xs = (xf.swapaxes(0, 1), dt.swapaxes(0, 1),
+              bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+        h_final, ys = jax.lax.scan(step, h0, xs)
+        ys = ys.swapaxes(0, 1)
+    y = ys + xf * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_seq.dtype)
+    g = lambda n: (fs.get(n) if fs else None)
+    out = tagging.dense_site(y, p["out_proj"], g("out_proj"), sp("out_proj"))
+    if return_state:
+        return out, (h_final, new_conv)
+    return out

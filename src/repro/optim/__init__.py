@@ -1,0 +1,2 @@
+from repro.optim.schedules import polynomial_decay, coupled_momentum
+from repro.optim.sgd import SGD

@@ -1,0 +1,34 @@
+"""Momentum-SGD baseline (the paper's first-order reference, Eq. 2).
+
+Same heavy-ball form as the NGD update (Eq. 23) with the identity
+preconditioner, so NGD-vs-SGD benchmark comparisons isolate the
+preconditioning itself.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class SGD:
+    def __init__(self, loss_fn: Callable, weight_decay: float = 0.0):
+        self.loss_fn = loss_fn
+        self.weight_decay = weight_decay
+
+    def init(self, params) -> dict:
+        return {"step": jnp.zeros((), jnp.int32),
+                "velocity": jax.tree.map(jnp.zeros_like, params)}
+
+    def step(self, params, state, batch, lr, mom):
+        (loss, aux), grads = jax.value_and_grad(
+            self.loss_fn, has_aux=True)(params, None, batch)
+        if self.weight_decay:
+            grads = jax.tree.map(lambda g, w: g + self.weight_decay * w,
+                                 grads, params)
+        vel = jax.tree.map(lambda v, g: mom * v - lr * g, state["velocity"], grads)
+        new_params = jax.tree.map(lambda w, v: w + v.astype(w.dtype), params, vel)
+        metrics = {"loss": loss}
+        return new_params, {"step": state["step"] + 1, "velocity": vel}, metrics

@@ -1,0 +1,8 @@
+"""Give the test process 8 virtual CPU devices (for the distributed-schedule
+and collective-analyzer tests) BEFORE jax initializes. Everything else runs
+unchanged on device 0. The 512-device setting stays exclusive to
+repro.launch.dryrun, per the launcher contract."""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

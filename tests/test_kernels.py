@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+I = dict(interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# kfac_factor (SYRK)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(32, 16), (128, 64), (100, 48), (256, 128),
+                                 (65, 33)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_factor_shapes_dtypes(n, d, dtype):
+    rng = np.random.RandomState(hash((n, d)) % 2**31)
+    x = jnp.asarray(rng.randn(n, d), dtype)
+    out = ops.kfac_factor(x, bm=32, bn=32, bk=64, **I)
+    expect = ref.kfac_factor_ref(x)
+    tol = 1e-4 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+
+
+def test_factor_is_exactly_symmetric():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(64, 48), jnp.float32)
+    out = np.asarray(ops.kfac_factor(x, bm=16, bn=16, bk=32, **I))
+    np.testing.assert_array_equal(out, out.T)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 96), d=st.integers(4, 64),
+       bm=st.sampled_from([8, 16, 32]), bk=st.sampled_from([16, 32]))
+def test_factor_property(n, d, bm, bk):
+    rng = np.random.RandomState(n * 97 + d)
+    x = jnp.asarray(rng.randn(n, d), jnp.float32)
+    out = ops.kfac_factor(x, bm=bm, bn=bm, bk=bk, **I)
+    np.testing.assert_allclose(out, ref.kfac_factor_ref(x), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# kfac_block_precond
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb,b,m", [(1, 32, 64), (3, 64, 48), (2, 40, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_precond(nb, b, m, dtype):
+    rng = np.random.RandomState(hash((nb, b, m)) % 2**31)
+    binv = jnp.asarray(rng.randn(nb, b, b), dtype)
+    w = jnp.asarray(rng.randn(nb, b, m), dtype)
+    out = ops.kfac_block_precond(binv, w, bm=16, bn=32, bk=16, **I)
+    expect = ref.block_precond_ref(binv, w)
+    tol = 1e-4 if dtype == jnp.float32 else 0.08
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nb=st.integers(1, 4), b=st.integers(8, 48), m=st.integers(8, 64))
+def test_block_precond_property(nb, b, m):
+    rng = np.random.RandomState(nb * 1000 + b * 10 + m)
+    binv = jnp.asarray(rng.randn(nb, b, b), jnp.float32)
+    w = jnp.asarray(rng.randn(nb, b, m), jnp.float32)
+    out = ops.kfac_block_precond(binv, w, bm=16, bn=16, bk=16, **I)
+    np.testing.assert_allclose(out, ref.block_precond_ref(binv, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,window", [(64, 0), (64, 16), (64, 7), (96, 32),
+                                      (50, 13)])
+def test_swa_attention(s, window):
+    rng = np.random.RandomState(s + window)
+    bh, hd = 4, 32
+    q = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(bh, s, hd), jnp.float32)
+    out = ops.swa_attention(q, k, v, window=window, bq=16, bk=16, **I)
+    expect = ref.swa_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_swa_attention_bf16(dtype):
+    rng = np.random.RandomState(7)
+    q = jnp.asarray(rng.randn(2, 32, 16), dtype)
+    k = jnp.asarray(rng.randn(2, 32, 16), dtype)
+    v = jnp.asarray(rng.randn(2, 32, 16), dtype)
+    out = ops.swa_attention(q, k, v, window=8, bq=16, bk=16, **I)
+    expect = ref.swa_attention_ref(q, k, v, window=8)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_swa_matches_model_attention():
+    """Kernel agrees with the model-layer chunked attention (same masking
+    semantics) for MHA."""
+    from repro.models.attention import attention
+    rng = np.random.RandomState(9)
+    b, s, h, hd, w = 2, 48, 2, 16, 12
+    q = jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+    model_out = attention(q, k, v, window=w, chunk=16)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kern = ops.swa_attention(qf, kf, vf, window=w, bq=16, bk=16, **I)
+    kern = kern.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(kern, model_out, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(8, 80), window=st.integers(0, 20),
+       hd=st.sampled_from([8, 16, 32]))
+def test_swa_property(s, window, hd):
+    rng = np.random.RandomState(s * 31 + window)
+    q = jnp.asarray(rng.randn(2, s, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(2, s, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(2, s, hd), jnp.float32)
+    out = ops.swa_attention(q, k, v, window=window, bq=16, bk=16, **I)
+    expect = ref.swa_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(out, expect, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,159 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kfac
+
+jax.config.update("jax_enable_x64", False)
+
+
+def test_block_partition_exact():
+    assert kfac.num_blocks(2048, 2048) == 1
+    assert kfac.num_blocks(2049, 2048) == 2
+    assert kfac.block_size(2049, 2048) == 1025
+    assert kfac.padded_dim(2049, 2048) == 2050
+
+
+def test_block_reshape_roundtrip():
+    x = jnp.arange(24.0).reshape(2, 12)
+    xb = kfac.block_reshape(x, 12, 5, axis=-1)   # nb=3, b=4
+    assert xb.shape == (2, 3, 4)
+    back = kfac.block_unreshape(xb, 12, axis=-2)
+    np.testing.assert_allclose(back, x)
+
+
+def test_factor_sum_matches_naive_blockdiag():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(50, 12), jnp.float32)
+    f = kfac.factor_sum(x, max_dim=4)            # (3, 4, 4)
+    full = np.asarray(x).T @ np.asarray(x)       # (12, 12)
+    for k in range(3):
+        np.testing.assert_allclose(f[k], full[4 * k:4 * k + 4, 4 * k:4 * k + 4],
+                                   rtol=1e-5)
+
+
+def test_factor_sum_padding():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(20, 10), jnp.float32)
+    f = kfac.factor_sum(x, max_dim=4)            # nb=3, b=4, pad 2
+    assert f.shape == (3, 4, 4)
+    # padded rows/cols must be exactly zero
+    np.testing.assert_allclose(f[2, 2:, :], 0.0)
+    np.testing.assert_allclose(f[2, :, 2:], 0.0)
+
+
+def test_damped_inverse_spd():
+    rng = np.random.RandomState(2)
+    m = rng.randn(6, 6)
+    f = jnp.asarray(m @ m.T, jnp.float32)[None]  # (1, 6, 6)
+    inv = kfac.damped_inverse(f, jnp.asarray([0.1]))
+    expect = np.linalg.inv(np.asarray(f[0]) + 0.1 * np.eye(6))
+    np.testing.assert_allclose(inv[0], expect, rtol=1e-4, atol=1e-5)
+
+
+def test_cholesky_inverse_matches_eigh():
+    rng = np.random.RandomState(3)
+    m = rng.randn(8, 8)
+    f = jnp.asarray(m @ m.T, jnp.float32)[None]
+    i1 = kfac.damped_inverse(f, jnp.asarray([0.5]))
+    i2 = kfac.cholesky_inverse(f, jnp.asarray([0.5]))
+    np.testing.assert_allclose(i1, i2, rtol=1e-4, atol=1e-5)
+
+
+def test_pi_correction_value():
+    a = 2.0 * jnp.eye(4)[None]
+    g = 8.0 * jnp.eye(2)[None]
+    pi = kfac.pi_correction(a, g, 4, 2)
+    np.testing.assert_allclose(pi, 0.5, rtol=1e-6)  # sqrt(2/8)
+
+
+def test_damped_factor_inverses_eq12():
+    # (A + pi sqrt(lam) I)^-1, (G + sqrt(lam)/pi I)^-1
+    a = 2.0 * jnp.eye(4)[None]
+    g = 8.0 * jnp.eye(2)[None]
+    lam = 0.25
+    a_inv, g_inv = kfac.damped_factor_inverses(a, g, lam, 4, 2)
+    pi = 0.5
+    np.testing.assert_allclose(a_inv[0], np.eye(4) / (2 + pi * 0.5), rtol=1e-5)
+    np.testing.assert_allclose(g_inv[0], np.eye(2) / (8 + 0.5 / pi), rtol=1e-5)
+
+
+def test_precondition_identity_is_noop():
+    rng = np.random.RandomState(4)
+    dw = jnp.asarray(rng.randn(10, 6), jnp.float32)
+    a_inv = jnp.broadcast_to(jnp.eye(5), (2, 5, 5))   # blocked identity
+    g_inv = jnp.broadcast_to(jnp.eye(3), (2, 3, 3))
+    u = kfac.precondition(dw, a_inv, g_inv)
+    np.testing.assert_allclose(u, dw, rtol=1e-5)
+
+
+def test_precondition_matches_dense_kron():
+    """Single-block preconditioning == dense Kronecker solve."""
+    rng = np.random.RandomState(5)
+    d_in, d_out = 5, 3
+    ma = rng.randn(d_in, d_in)
+    mg = rng.randn(d_out, d_out)
+    a = jnp.asarray(ma @ ma.T + np.eye(d_in), jnp.float32)
+    g = jnp.asarray(mg @ mg.T + np.eye(d_out), jnp.float32)
+    dw = jnp.asarray(rng.randn(d_in, d_out), jnp.float32)
+    a_inv = kfac.damped_inverse(a[None], jnp.asarray([0.0]))
+    g_inv = kfac.damped_inverse(g[None], jnp.asarray([0.0]))
+    u = kfac.precondition(dw, a_inv, g_inv)
+    expect = np.linalg.inv(np.asarray(a)) @ np.asarray(dw) @ np.linalg.inv(np.asarray(g))
+    np.testing.assert_allclose(u, expect, rtol=1e-3, atol=1e-4)
+
+
+def test_precondition_diag_kinds():
+    dw = jnp.ones((4, 3))
+    a_inv = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    g_inv = jnp.asarray([1.0, 0.5, 0.25])
+    u = kfac.precondition(dw, a_inv, g_inv)
+    expect = np.outer([1, 2, 3, 4], [1, 0.5, 0.25])
+    np.testing.assert_allclose(u, expect, rtol=1e-6)
+
+
+def test_precondition_broadcasts_layer_axis():
+    rng = np.random.RandomState(6)
+    L, d_in, d_out = 3, 4, 4
+    dw = jnp.asarray(rng.randn(L, d_in, d_out), jnp.float32)
+    a_inv = jnp.broadcast_to(jnp.eye(4) * 2.0, (L, 1, 4, 4))
+    g_inv = jnp.broadcast_to(jnp.eye(4) * 0.5, (L, 1, 4, 4))
+    u = kfac.precondition(dw, a_inv, g_inv)
+    np.testing.assert_allclose(u, dw, rtol=1e-5)
+
+
+def test_unitwise_solve_2x2():
+    # one channel: F = [[2, 1], [1, 3]], lam=0 -> solve F x = g
+    stats = jnp.asarray([[2.0, 1.0, 3.0]])
+    gg, gb = jnp.asarray([1.0]), jnp.asarray([0.0])
+    ug, ub = kfac.unitwise_solve(stats, gg, gb, 0.0)
+    f = np.array([[2, 1], [1, 3.0]])
+    expect = np.linalg.solve(f, [1.0, 0.0])
+    np.testing.assert_allclose([ug[0], ub[0]], expect, rtol=1e-5)
+
+
+def test_sym_pack_roundtrip():
+    rng = np.random.RandomState(7)
+    m = rng.randn(6, 6)
+    f = jnp.asarray(m + m.T, jnp.float32)
+    p = kfac.sym_pack(f)
+    assert p.shape == (21,)
+    np.testing.assert_allclose(kfac.sym_unpack(p, 6), f, rtol=1e-6)
+
+
+def test_sym_pack_batched():
+    rng = np.random.RandomState(8)
+    m = rng.randn(2, 3, 4, 4)
+    f = jnp.asarray(m + np.swapaxes(m, -1, -2), jnp.float32)
+    p = kfac.sym_pack(f)
+    assert p.shape == (2, 3, 10)
+    np.testing.assert_allclose(kfac.sym_unpack(p, 4), f, rtol=1e-6)
+
+
+def test_frob_distance():
+    x = jnp.ones((3, 3))
+    y = jnp.zeros((3, 3))
+    np.testing.assert_allclose(kfac.frob_distance(x, x), 0.0, atol=1e-7)
+    d = kfac.frob_distance(2 * x, x)
+    np.testing.assert_allclose(d, 1.0, rtol=1e-6)

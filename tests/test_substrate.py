@@ -1,0 +1,170 @@
+"""Substrate coverage: augmentation (paper §6.1), checkpointing, stale
+accounting, input_specs, chunked recurrent scans."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, INPUT_SHAPES
+from repro.core.stale import sym_packed_bytes
+from repro.data.augment import RunningMixup, random_erase
+from repro.data.synthetic import token_batches, image_batches
+from repro.models.transformer import DecoderLM
+
+
+def test_running_mixup_eq18_19():
+    """x~(t) mixes with the PREVIOUS virtual batch, not the raw one."""
+    mix = RunningMixup(alpha=1e6, n_classes=4, seed=0)  # lam ~= 0.5 w.h.p.
+    x1 = jnp.ones((2, 4, 4, 3))
+    y1 = jnp.asarray([0, 1])
+    out1, t1 = mix(x1, y1)
+    np.testing.assert_array_equal(out1, x1)             # first step: raw
+    x2 = jnp.zeros((2, 4, 4, 3))
+    out2, t2 = mix(x2, jnp.asarray([2, 3]))
+    # mixed towards the previous virtual batch (ones)
+    assert 0.0 < float(out2.mean()) < 1.0
+    np.testing.assert_allclose(np.asarray(t2).sum(-1), 1.0, rtol=1e-5)
+    # step 3 mixes with step-2 virtual, not with x1
+    out3, _ = mix(x1, y1)
+    assert not np.allclose(out3, out1)
+
+
+def test_random_erase_zero_value():
+    rng = np.random.RandomState(0)
+    imgs = np.ones((16, 24, 24, 3), np.float32)
+    out = random_erase(rng, imgs, p=1.0)
+    assert (out == 0).any()                             # erased with ZEROS
+    assert out.min() == 0.0 and out.max() == 1.0
+    # originals untouched
+    assert imgs.min() == 1.0
+
+
+def test_markov_lm_is_learnable_signal():
+    it = token_batches(64, 4, 32, seed=0)
+    b1, b2 = next(it), next(it)
+    assert b1["tokens"].shape == (4, 32)
+    # labels are the next tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import save_checkpoint, restore_checkpoint
+    params = {"a": {"b": jnp.arange(6.0).reshape(2, 3)},
+              "c": jnp.ones((4,), jnp.int32)}
+    opt = {"step": jnp.asarray(7), "velocity": {"a": {"b": jnp.zeros((2, 3))},
+                                                "c": jnp.zeros((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, params, opt, {"delta": 3})
+    r = restore_checkpoint(str(tmp_path))
+    assert r["step"] == 7
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 params, r["params"])
+    assert r["controller"]["delta"] == 3
+
+
+def test_sym_packed_bytes():
+    assert sym_packed_bytes((4, 4)) == 10 * 4           # n(n+1)/2 * f32
+    assert sym_packed_bytes((3, 4, 4)) == 3 * 10 * 4    # leading axes multiply
+    assert sym_packed_bytes((5,)) == 5 * 4              # non-square: full
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_input_specs_shapes(shape_name):
+    cfg = get_config("llama3_2_1b")
+    model = DecoderLM(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    specs = model.input_specs(shape)
+    if shape.kind == "train":
+        assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+        assert specs["labels"].shape == (shape.global_batch, shape.seq_len)
+    elif shape.kind == "prefill":
+        assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+    else:
+        assert specs["tokens"].shape == (shape.global_batch,)
+        assert specs["cache"]["k"].shape[2] == shape.seq_len
+    # pure metadata: no leaf is a concrete array
+    for leaf in jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_vlm_input_specs_have_pixel_embeds():
+    cfg = get_config("llava_next_34b")
+    model = DecoderLM(cfg)
+    specs = model.input_specs(INPUT_SHAPES["train_4k"])
+    assert specs["pixel_embeds"].shape == (256, cfg.frontend_tokens,
+                                           cfg.frontend_dim)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([2, 4, 8]), s=st.sampled_from([16, 32]))
+def test_chunked_wkv_scan_property(chunk, s):
+    from repro.models.rwkv import _wkv_scan
+    rng = np.random.RandomState(chunk * 100 + s)
+    b, h, hd = 2, 2, 4
+    r, k, v = (jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.rand(b, s, h, hd) * 0.5 + 0.4, jnp.float32)
+    u = jnp.asarray(rng.randn(h, hd), jnp.float32)
+    st0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    st_a, y_a = _wkv_scan(r, k, v, w, u, st0, chunk=0)
+    st_b, y_b = _wkv_scan(r, k, v, w, u, st0, chunk=chunk)
+    np.testing.assert_allclose(y_a, y_b, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(st_a, st_b, rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_ssm_matches_plain():
+    import dataclasses
+    cfg0 = get_config("hymba_1_5b").reduced()
+    m0 = DecoderLM(cfg0)
+    m1 = DecoderLM(dataclasses.replace(cfg0, scan_chunk=8))
+    params = m0.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg0.vocab, (2, 16)),
+                                   jnp.int32)}
+    l0, _ = m0.forward(params, batch)
+    l1, _ = m1.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l0, np.float32),
+                               np.asarray(l1, np.float32), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_chunked_scan_grads_match():
+    """remat'd chunked scan must give the same gradients."""
+    import dataclasses
+    cfg0 = get_config("rwkv6_7b").reduced()
+    m0 = DecoderLM(cfg0)
+    m1 = DecoderLM(dataclasses.replace(cfg0, scan_chunk=8))
+    params = m0.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(1)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg0.vocab, (2, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg0.vocab, (2, 16)),
+                                   jnp.int32)}
+    g0 = jax.grad(lambda p: m0.loss(p, None, batch)[0])(params)
+    g1 = jax.grad(lambda p: m1.loss(p, None, batch)[0])(params)
+
+    def close(a, b):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        assert np.abs(a - b).max() <= 1e-3 * (np.abs(a).max() + 1e-6)
+
+    jax.tree.map(close, g0, g1)
+
+
+def test_tp_aligned_spec_shapes():
+    """tp_shards shrinks factor blocks to shard width on the sharded side."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("llama3_2_1b"), tp_shards=16)
+    m = DecoderLM(cfg)
+    # mlp_down: a-side is d_ff=8192, sharded -> blocks of 512
+    spec = m.specs["mlp_down"]
+    assert spec.a_dim == 512
+    assert spec.a_shape(8192) == (16, 512, 512)
+    # wq g-side: h*hd = 2048 -> 128-wide blocks
+    assert m.specs["attn_wq"].g_dim == 128
+    # wk g-side: kv*hd = 512 -> 512/16=32 < min_block: NOT aligned
+    assert m.specs["attn_wk"].g_dim == cfg.kfac_max_dim
