@@ -1,12 +1,20 @@
-"""Kernel micro-benchmarks: Pallas kernels vs pure-jnp oracles.
+"""Kernel micro-benchmarks + end-to-end backend A/B.
 
-On CPU the Pallas kernels run in interpret mode (Python emulation) so their
-wall time is NOT indicative of TPU performance; we report the jnp-oracle
-time as the timing column and the kernel-vs-oracle max |err| as the derived
-column (the correctness contract the TPU kernel must meet).
+Micro section: Pallas kernels vs pure-jnp oracles. On CPU the Pallas kernels
+run in interpret mode (Python emulation) so their wall time is NOT indicative
+of TPU performance; we report the jnp-oracle time as the timing column and
+the kernel-vs-oracle max |err| as the derived column (the correctness
+contract the TPU kernel must meet).
+
+E2E section: a full SP-NGD ``train_step`` timed once per dispatch backend
+(``ref`` vs ``pallas``), so every PR records the step-time delta of routing
+the hot paths through the kernels. ``run()`` also stashes the measurements in
+``LAST_RESULTS`` for the JSON emitter in ``benchmarks.run``.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -15,9 +23,46 @@ import numpy as np
 from benchmarks.common import row, time_fn
 from repro.kernels import ops, ref
 
+# filled by run(): {"kernel.<name>": {"us": ..., "maxerr": ...},
+#                   "train_step.<backend>": {"us": ..., "loss": ...}}
+LAST_RESULTS: dict = {}
+
+
+def _bench_train_step(backend: str, quick: bool):
+    from repro.configs import get_config
+    from repro.core.ngd import NGDConfig, SPNGD
+    from repro.launch.train import make_train_step
+    from repro.models.transformer import DecoderLM
+
+    cfg = get_config("llama3_2_1b").reduced(
+        head_dim=32, d_ff=128, vocab=256, sliding_window=8)
+    cfg = dataclasses.replace(cfg, backend=backend)
+    model = DecoderLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = SPNGD(model.loss, model.site_infos(), model.fstats,
+                model.site_counts, NGDConfig(damping=1e-3, backend=backend))
+    state = opt.init(params)
+    rng = np.random.RandomState(0)
+    b, s = (4, 16) if quick else (8, 32)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+    flags = {k: jnp.asarray(True) for k in opt.stat_names()}
+    step = jax.jit(make_train_step(model, opt))
+
+    def call():
+        p, st, m = step(params, state, batch, flags, 1e-3, 5e-3, 0.9)
+        return m["loss"]
+
+    t = time_fn(call, warmup=1, iters=3 if quick else 5)
+    loss = float(call())
+    return t, loss
+
 
 def run(quick: bool = False):
     out = []
+    LAST_RESULTS.clear()
     rng = np.random.RandomState(0)
     n, d = (256, 128) if quick else (1024, 256)
 
@@ -26,6 +71,7 @@ def run(quick: bool = False):
     err = float(jnp.max(jnp.abs(
         ops.kfac_factor(x, bm=64, bn=64, bk=128, interpret=True)
         - ref.kfac_factor_ref(x))))
+    LAST_RESULTS["kernel.kfac_factor_syrk"] = {"us": t, "maxerr": err}
     out.append(row("kernel.kfac_factor_syrk", t, f"maxerr={err:.2e}"))
 
     nb, b, m = (2, 64, 64) if quick else (4, 128, 128)
@@ -35,6 +81,7 @@ def run(quick: bool = False):
     err = float(jnp.max(jnp.abs(
         ops.kfac_block_precond(binv, w, bm=32, bn=32, bk=32, interpret=True)
         - ref.block_precond_ref(binv, w))))
+    LAST_RESULTS["kernel.kfac_block_precond"] = {"us": t, "maxerr": err}
     out.append(row("kernel.kfac_block_precond", t, f"maxerr={err:.2e}"))
 
     bh, s, hd, win = (2, 64, 32, 16) if quick else (4, 128, 64, 32)
@@ -46,7 +93,18 @@ def run(quick: bool = False):
     err = float(jnp.max(jnp.abs(
         ops.swa_attention(q, k, v, window=win, bq=32, bk=32, interpret=True)
         - ref.swa_attention_ref(q, k, v, window=win))))
+    LAST_RESULTS["kernel.swa_attention"] = {"us": t, "maxerr": err}
     out.append(row("kernel.swa_attention", t, f"maxerr={err:.2e}"))
+
+    # ---- end-to-end dispatch A/B: full train_step per backend ----
+    for backend in ("ref", "pallas"):
+        t, loss = _bench_train_step(backend, quick)
+        LAST_RESULTS[f"train_step.{backend}"] = {"us": t, "loss": loss}
+        out.append(row(f"train_step.{backend}", t, f"loss={loss:.4f}"))
+    r = LAST_RESULTS["train_step.ref"]["us"]
+    p = LAST_RESULTS["train_step.pallas"]["us"]
+    LAST_RESULTS["train_step.pallas_over_ref"] = {"ratio": p / r}
+    out.append(row("train_step.pallas_over_ref", 0.0, f"ratio={p / r:.2f}"))
     return out
 
 

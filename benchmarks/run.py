@@ -7,14 +7,44 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   fisher_ablation  Fig. 5 technique ablation (emp/1mc x unitBN/fullBN x stale)
   stale_reduction  Table 2 reduction % + Fig. 6 byte series
   scaling          Fig. 5 time/step vs #devices (measured + comm model)
-  kernels_bench    Pallas kernel contracts
+  kernels_bench    Pallas kernel contracts + ref-vs-pallas train_step A/B
+
+The kernels module additionally writes ``BENCH_kernels.json`` (repo root)
+with both backends' step timings so later PRs have a perf trajectory to
+compare against.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import traceback
+
+import jax
+
+
+def _emit_kernels_json(quick: bool) -> None:
+    from benchmarks import kernels_bench
+    if not kernels_bench.LAST_RESULTS:
+        return
+    rec = {
+        "quick": quick,
+        "jax_backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "host": platform.machine(),
+        "note": ("Pallas kernels run interpret=True on CPU: "
+                 "train_step.pallas timings here measure the dispatch "
+                 "plumbing, not TPU kernel speed"),
+        "results": kernels_bench.LAST_RESULTS,
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -45,6 +75,14 @@ def main() -> None:
             failed.append(name)
             print(f"{name}.ERROR,0.0,{type(e).__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            continue
+        if name == "kernels_bench":
+            try:
+                _emit_kernels_json(args.quick)
+            except OSError as e:
+                # read-only checkout etc.: the benchmark itself succeeded
+                print(f"# BENCH_kernels.json not written: {e}",
+                      file=sys.stderr)
     if failed:
         sys.exit(1)
 

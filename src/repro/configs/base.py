@@ -42,6 +42,8 @@ class ArchConfig:
     frontend: str = "none"       # none | vision | audio
     frontend_tokens: int = 0     # patches / frames prepended
     frontend_dim: int = 0        # raw embedding dim before projector
+    # kernels
+    backend: str = "auto"        # "ref" | "pallas" | "auto" (kernels.dispatch)
     # K-FAC
     kfac_max_dim: int = 2048
     head_g_kind: str = "diag"    # vocab-side factor of the LM head

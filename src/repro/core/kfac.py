@@ -76,18 +76,19 @@ def block_unreshape(x: jax.Array, d: int, axis: int = -2) -> jax.Array:
 # Factor statistics from token matrices
 # ---------------------------------------------------------------------------
 
-def factor_sum(x: jax.Array, max_dim: int) -> jax.Array:
+def factor_sum(x: jax.Array, max_dim: int, *,
+               backend: Optional[str] = None) -> jax.Array:
     """Blocked ``sum_t x_t x_t^T`` for a token matrix ``x`` of shape
     (..., n, d). Returns (..., nb, b, b) in f32.
 
     Inputs stay in their storage dtype (bf16 on TPU) with f32 accumulation —
     the paper's mixed-precision Tensor-Core statistics construction (§5.2)
-    mapped to the MXU; it also halves any sharding-induced traffic on x."""
-    d = x.shape[-1]
-    xb = block_reshape(x, d, max_dim, axis=-1)
-    # (..., n, nb, b) -> (..., nb, b, b)
-    return jnp.einsum("...nka,...nkb->...kab", xb, xb,
-                      preferred_element_type=jnp.float32)
+    mapped to the MXU; it also halves any sharding-induced traffic on x.
+
+    ``backend`` selects the implementation ("ref" | "pallas" | "auto", see
+    :mod:`repro.kernels.dispatch`)."""
+    from repro.kernels import dispatch
+    return dispatch.factor_sum(x, max_dim, backend=backend)
 
 
 def diag_factor_sum(x: jax.Array) -> jax.Array:
@@ -123,7 +124,6 @@ def damped_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
     f: (..., nb, b, b); damping broadcastable to (...,). Uses eigh for
     robustness (clamps negative eigenvalues that appear from bf16
     accumulation)."""
-    b = f.shape[-1]
     f = 0.5 * (f + jnp.swapaxes(f, -1, -2))  # re-symmetrize
     vals, vecs = jnp.linalg.eigh(f)
     d = jnp.asarray(damping)[..., None]  # broadcast over the eigenvalue axis
@@ -159,13 +159,17 @@ def damped_factor_inverses(a: jax.Array, g: jax.Array, lam: float,
 # ---------------------------------------------------------------------------
 
 def precondition(dw: jax.Array, a_inv: Optional[jax.Array],
-                 g_inv: Optional[jax.Array]) -> jax.Array:
+                 g_inv: Optional[jax.Array], *,
+                 backend: Optional[str] = None) -> jax.Array:
     """Apply ``U = A^-1 @ dW @ G^-1`` with blocked inverses.
 
     dw: (..., d_in, d_out).
     a_inv: (..., nbA, bA, bA) or (..., d_in) diagonal or None.
     g_inv: (..., nbG, bG, bG) or (..., d_out) diagonal or None.
+    ``backend`` routes the blocked applications through
+    :mod:`repro.kernels.dispatch` (diagonal sides stay elementwise).
     """
+    from repro.kernels import dispatch
     d_in, d_out = dw.shape[-2], dw.shape[-1]
     u = dw.astype(jnp.float32)
     if a_inv is not None:
@@ -174,7 +178,7 @@ def precondition(dw: jax.Array, a_inv: Optional[jax.Array],
         else:
             ba = a_inv.shape[-1]
             ub = block_reshape(u, d_in, ba, axis=-2)   # (..., nbA, bA, d_out)
-            ub = jnp.einsum("...kab,...kbo->...kao", a_inv, ub)
+            ub = dispatch.block_precond_left(a_inv, ub, backend=backend)
             u = block_unreshape(ub, d_in, axis=-3)
     if g_inv is not None:
         if g_inv.ndim == dw.ndim - 1:          # diagonal over d_out
@@ -182,7 +186,7 @@ def precondition(dw: jax.Array, a_inv: Optional[jax.Array],
         else:
             bg = g_inv.shape[-1]
             ub = block_reshape(u, d_out, bg, axis=-1)  # (..., d_in, nbG, bG)
-            ub = jnp.einsum("...iko,...kop->...ikp", ub, g_inv)
+            ub = dispatch.block_precond_right(ub, g_inv, backend=backend)
             u = block_unreshape(ub, d_out, axis=-2)
     return u.astype(dw.dtype)
 

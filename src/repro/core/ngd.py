@@ -44,6 +44,9 @@ class NGDConfig:
     rescale_eps: float = 1e-9
     history: int = 2                 # 2 = full Algorithm 2; 1 = cheap variant
     sgd_fallback_scale: float = 1.0  # lr scale for non-sited params
+    backend: str = "auto"            # kernel backend for the hot paths
+                                     # ("ref" | "pallas" | "auto";
+                                     #  repro.kernels.dispatch)
 
 
 def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
@@ -54,11 +57,12 @@ def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
 
 
 def _damped_inv(stat: jax.Array, kind: str, damp: jax.Array,
-                method: str) -> jax.Array:
+                method: str, backend: str = "auto") -> jax.Array:
     """Apply-ready inverse: blocked matrix inverse or elementwise 1/(x+d)."""
     if kind == "full":
-        inv = kfac.damped_inverse if method == "eigh" else kfac.cholesky_inverse
-        return inv(stat, damp[..., None])        # broadcast over block axis
+        from repro.kernels import dispatch
+        return dispatch.damped_inverse(stat, damp[..., None], method=method,
+                                       backend=backend)  # bcast over blocks
     return 1.0 / (jnp.maximum(stat, 0.0) + damp[..., None])
 
 
@@ -173,10 +177,10 @@ class SPNGD:
                 sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
                 if a is not None:
                     pc["a"] = _damped_inv(a, info.spec.a_kind, pi * sl,
-                                          cfg.inverse_method)
+                                          cfg.inverse_method, cfg.backend)
                 if g is not None:
                     pc["g"] = _damped_inv(g, info.spec.g_kind, sl / pi,
-                                          cfg.inverse_method)
+                                          cfg.inverse_method, cfg.backend)
             for key in ("d", "uw"):
                 if key in normalized:
                     pc[key] = normalized[key]
@@ -204,7 +208,8 @@ class SPNGD:
         pc = curv["precond"]
         if info.kind in ("dense", "grouped", "embed"):
             dw = get_path(grads, info.param)
-            u = kfac.precondition(dw, pc.get("a"), pc.get("g"))
+            u = kfac.precondition(dw, pc.get("a"), pc.get("g"),
+                                  backend=self.cfg.backend)
             return {info.param: u}
         if info.kind == "conv":
             dw = get_path(grads, info.param)       # (kh, kw, cin, cout)
@@ -213,7 +218,8 @@ class SPNGD:
             d2 = jnp.transpose(dw, tuple(range(len(lead))) +
                                tuple(len(lead) + i for i in (2, 0, 1, 3)))
             d2 = d2.reshape(lead + (cin * kh * kw, cout))
-            u = kfac.precondition(d2, pc.get("a"), pc.get("g"))
+            u = kfac.precondition(d2, pc.get("a"), pc.get("g"),
+                                  backend=self.cfg.backend)
             u = u.reshape(lead + (cin, kh, kw, cout))
             u = jnp.transpose(u, tuple(range(len(lead))) +
                               tuple(len(lead) + i for i in (1, 2, 0, 3)))

@@ -50,12 +50,16 @@ class FactorSpec:
     ``a_max``/``g_max`` override ``max_dim`` per side — used to align factor
     blocks to tensor-parallel shard boundaries so block construction never
     crosses shards (zero cross-shard factor communication; DESIGN.md §4).
+
+    ``backend`` selects the factor-construction kernel for this site
+    ("ref" | "pallas" | "auto"; :mod:`repro.kernels.dispatch`).
     """
     a_kind: str = "full"        # "full" | "diag" | "none"
     g_kind: str = "full"        # "full" | "diag" | "none"
     max_dim: int = 2048         # block-diagonal factor cap (DESIGN.md §4)
     a_max: int = 0              # 0 -> max_dim
     g_max: int = 0
+    backend: str = "auto"       # kernel backend for this site's factor sums
 
     @property
     def a_dim(self) -> int:
@@ -98,11 +102,13 @@ def make_stats(spec: FactorSpec, d_in: int, d_out: int,
 
 
 def _stat_sum(x2d: jax.Array, kind: str, max_dim: int,
-              want_shape: tuple[int, ...]) -> jax.Array:
+              want_shape: tuple[int, ...],
+              backend: str = "auto") -> jax.Array:
     """Raw factor sum for a token matrix (n, d), matching the dummy's shape
     (which may include leading group axes already consumed by the caller)."""
     if kind == "full":
-        return kfac.factor_sum(x2d, max_dim).reshape(want_shape)
+        return kfac.factor_sum(x2d, max_dim,
+                               backend=backend).reshape(want_shape)
     if kind == "diag":
         return kfac.diag_factor_sum(x2d).reshape(want_shape)
     raise ValueError(kind)
@@ -129,8 +135,10 @@ def _dense_site_bwd(spec, res, gy):
     g2d = gy.reshape(-1, d_out)
     dw = jnp.matmul(x2d.T, g2d.astype(x2d.dtype)).astype(w.dtype)
     dx = jnp.matmul(gy, w.T).astype(x.dtype)
-    da = _stat_sum(x2d, spec.a_kind, spec.a_dim, a_shape) if a_shape else jnp.zeros(a_shape)
-    dg = _stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape) if g_shape else jnp.zeros(g_shape)
+    da = (_stat_sum(x2d, spec.a_kind, spec.a_dim, a_shape, spec.backend)
+          if a_shape else jnp.zeros(a_shape))
+    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+          if g_shape else jnp.zeros(g_shape))
     return dx, dw, da, dg
 
 
@@ -166,8 +174,10 @@ def _grouped_site_bwd(spec, res, gy):
     dw = jnp.einsum("end,enf->edf", x, gy.astype(x.dtype)).astype(w.dtype)
     dx = jnp.einsum("enf,edf->end", gy, w).astype(x.dtype)
     # factor sums keep the expert axis: (E, n, d) -> (E, nb, b, b)
-    da = _stat_sum(x, spec.a_kind, spec.a_dim, a_shape) if a_shape else None
-    dg = _stat_sum(gy, spec.g_kind, spec.g_dim, g_shape) if g_shape else None
+    da = (_stat_sum(x, spec.a_kind, spec.a_dim, a_shape, spec.backend)
+          if a_shape else None)
+    dg = (_stat_sum(gy, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+          if g_shape else None)
     if da is None:
         da = jnp.zeros(a_shape)
     if dg is None:
@@ -315,7 +325,8 @@ def _embed_site_bwd(spec, res, gy):
     g2d = gy.reshape(-1, d)
     dtable = jnp.zeros(tshape, gy.dtype).at[flat_ids].add(g2d)
     da = jnp.zeros(a_shape, jnp.float32).at[flat_ids].add(1.0) if a_shape else jnp.zeros(a_shape)
-    dg = _stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape) if g_shape else jnp.zeros(g_shape)
+    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+          if g_shape else jnp.zeros(g_shape))
     dids = np.zeros(ids.shape, dtype=jax.dtypes.float0)  # int input: no tangent
     return dids, dtable, da, dg
 

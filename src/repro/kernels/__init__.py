@@ -1,1 +1,2 @@
 from repro.kernels.ops import kfac_factor, kfac_block_precond, swa_attention
+from repro.kernels import dispatch

@@ -1,0 +1,230 @@
+"""Kernel backend dispatch: one routing layer between the SP-NGD hot paths
+and their implementations.
+
+The paper's overhead argument (§5.2) rests on two hot spots — statistics
+construction ``A = X^T X`` and preconditioning ``A^-1 dW G^-1`` — running at
+hardware speed. This module owns the decision of *which* implementation runs:
+
+* ``"ref"``    — the pure-``jnp`` einsum path (seed behaviour, bit-for-bit).
+* ``"pallas"`` — the MXU-aligned Pallas kernels in this package. On CPU the
+  kernels execute with ``interpret=True`` (numerics-exact emulation); on TPU
+  they compile to real Mosaic kernels.
+* ``"auto"``   — resolve per op and per shape: Pallas on TPU when the dims
+  that predict the kernel's win are at least :data:`MIN_PALLAS_DIM`, ref
+  everywhere else. Each op passes its own relevant dims to :func:`resolve`
+  (matmul-shaped ops gate on their contraction dims — tiny dims cannot fill
+  an MXU tile and lose to plain XLA; attention gates on sequence length
+  only, being bandwidth- not MXU-bound). On CPU auto always resolves to
+  ref, so it is semantics-preserving for tests.
+
+Every public op here accepts the *blocked* factor layout used by the rest of
+the framework — arrays of shape ``(lead..., nb, b, b)`` with arbitrary
+leading layer/expert axes — and shims it down to the rank-2/rank-3 layouts
+the kernels accept (``vmap`` for the SYRK kernel, a leading-axis collapse for
+the block preconditioner, which treats its leading dim as an independent
+grid axis anyway). f32 accumulation semantics are identical across backends:
+inputs may be bf16, accumulation and outputs are f32.
+
+Adding a new kernel
+-------------------
+Register an implementation for an existing op (or a new op name) with
+:func:`register`::
+
+    from repro.kernels import dispatch
+    dispatch.register("factor_sum", "pallas", my_faster_impl)
+
+An op resolved to a backend with no registered implementation falls back to
+``"ref"`` (so e.g. ``backend="pallas"`` still trains end-to-end while ops are
+ported one at a time); ``ref`` implementations are mandatory.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+BACKENDS = ("ref", "pallas", "auto")
+
+# auto: smallest contraction dim worth handing to the MXU kernels. One MXU
+# tile is 128x128; below that the kernel's padding outweighs its win.
+MIN_PALLAS_DIM = 128
+
+_TABLE: dict[str, dict[str, Callable]] = {}
+
+
+def register(op: str, backend: str, fn: Callable) -> None:
+    """Register ``fn`` as the ``backend`` implementation of ``op``."""
+    _TABLE.setdefault(op, {})[backend] = fn
+
+
+def lookup(op: str, backend: str) -> Callable:
+    impls = _TABLE[op]
+    return impls.get(backend, impls["ref"])
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve(backend: str | None, *dims: int) -> str:
+    """Map a config knob to a concrete backend for one op instance.
+
+    ``dims`` are the shape quantities that must be MXU-worthy for the Pallas
+    path to pay off under ``"auto"`` (contraction dims, sequence length...).
+    """
+    backend = backend or "auto"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
+    if backend != "auto":
+        return backend
+    if _on_tpu() and all(d >= MIN_PALLAS_DIM for d in dims):
+        return "pallas"
+    return "ref"
+
+
+# ---------------------------------------------------------------------------
+# factor_sum: blocked A = sum_t x_t x_t^T     (..., n, d) -> (..., nb, b, b)
+# ---------------------------------------------------------------------------
+
+def _factor_sum_ref(x: jax.Array, max_dim: int) -> jax.Array:
+    from repro.core import kfac
+    d = x.shape[-1]
+    xb = kfac.block_reshape(x, d, max_dim, axis=-1)
+    return jnp.einsum("...nka,...nkb->...kab", xb, xb,
+                      preferred_element_type=jnp.float32)
+
+
+def _factor_sum_pallas(x: jax.Array, max_dim: int) -> jax.Array:
+    from repro.core import kfac
+    from repro.kernels import ops
+    d = x.shape[-1]
+    xb = kfac.block_reshape(x, d, max_dim, axis=-1)   # (..., n, nb, b)
+    xb = jnp.moveaxis(xb, -2, -3)                     # (..., nb, n, b)
+    lead = xb.shape[:-2]
+    n, b = xb.shape[-2:]
+    flat = xb.reshape((-1, n, b))
+    out = jax.vmap(lambda m: ops.kfac_factor(m))(flat)
+    return out.reshape(lead + (b, b))
+
+
+def factor_sum(x: jax.Array, max_dim: int, *,
+               backend: str | None = None) -> jax.Array:
+    """Blocked raw factor sum; the §5.2 statistics-construction hot spot."""
+    from repro.core import kfac
+    b = kfac.block_size(x.shape[-1], max_dim)
+    which = resolve(backend, b, x.shape[-2])
+    return lookup("factor_sum", which)(x, max_dim)
+
+
+# ---------------------------------------------------------------------------
+# block_precond_left:  U[k] = Binv[k] @ W[k]
+#   binv (..., nb, b, b), w (..., nb, b, m) -> (..., nb, b, m) f32
+# ---------------------------------------------------------------------------
+
+def _precond_left_ref(binv: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.einsum("...kab,...kbo->...kao", binv, w)
+
+
+def _collapse_lead(binv, w):
+    """Fold leading layer/expert axes into the kernel's block-grid axis —
+    every (b x b) @ (b x m) product is independent, so (lead..., nb) can be
+    flattened into one batch dim the kernel iterates as grid dim 0."""
+    lead = binv.shape[:-2]
+    b = binv.shape[-1]
+    m = w.shape[-1]
+    return binv.reshape((-1, b, b)), w.reshape((-1, b, m)), lead
+
+
+def _precond_left_pallas(binv: jax.Array, w: jax.Array) -> jax.Array:
+    from repro.kernels import ops
+    bf, wf, lead = _collapse_lead(binv, w)
+    out = ops.kfac_block_precond(bf, wf)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def block_precond_left(binv: jax.Array, w: jax.Array, *,
+                       backend: str | None = None) -> jax.Array:
+    """Apply blocked inverse from the left (the ``A^-1 dW`` half)."""
+    which = resolve(backend, binv.shape[-1], w.shape[-1])
+    return lookup("block_precond_left", which)(binv, w)
+
+
+# ---------------------------------------------------------------------------
+# block_precond_right:  U[k] = W[k] @ Binv[k]
+#   w (..., m, nb, b), binv (..., nb, b, b) -> (..., m, nb, b) f32
+# ---------------------------------------------------------------------------
+
+def _precond_right_ref(w: jax.Array, binv: jax.Array) -> jax.Array:
+    return jnp.einsum("...iko,...kop->...ikp", w, binv)
+
+
+def _precond_right_pallas(w: jax.Array, binv: jax.Array) -> jax.Array:
+    # W @ Binv == (Binv^T @ W^T)^T per block: reuse the left kernel.
+    wt = jnp.swapaxes(jnp.moveaxis(w, -3, -2), -1, -2)   # (..., nb, b, m)
+    out = _precond_left_pallas(jnp.swapaxes(binv, -1, -2), wt)
+    return jnp.moveaxis(jnp.swapaxes(out, -1, -2), -2, -3)
+
+
+def block_precond_right(w: jax.Array, binv: jax.Array, *,
+                        backend: str | None = None) -> jax.Array:
+    """Apply blocked inverse from the right (the ``dW G^-1`` half)."""
+    which = resolve(backend, binv.shape[-1], w.shape[-3])
+    return lookup("block_precond_right", which)(w, binv)
+
+
+# ---------------------------------------------------------------------------
+# damped_inverse: (F + damping I)^-1 per block — ref-only today; the slot
+# exists so a Pallas Newton-Schulz / Cholesky kernel drops in via register().
+# ---------------------------------------------------------------------------
+
+def _damped_inverse_ref(f, damping, method: str):
+    from repro.core import kfac
+    inv = kfac.damped_inverse if method == "eigh" else kfac.cholesky_inverse
+    return inv(f, damping)
+
+
+def damped_inverse(f: jax.Array, damping, *, method: str = "eigh",
+                   backend: str | None = None) -> jax.Array:
+    which = resolve(backend, f.shape[-1])
+    return lookup("damped_inverse", which)(f, damping, method)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention: causal sliding-window attention, (BH, S, hd) layout
+# ---------------------------------------------------------------------------
+
+def _swa_ref(q, k, v, window: int):
+    from repro.kernels import ref
+    return ref.swa_attention_ref(q, k, v, window=window)
+
+
+def _swa_pallas(q, k, v, window: int):
+    from repro.kernels import ops
+    return ops.swa_attention(q, k, v, window=window)
+
+
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0, backend: str | None = None) -> jax.Array:
+    # auto gates on seq only: flash attention's win is avoiding the (S, S)
+    # score materialization (bandwidth-bound), not MXU tile fill, and the
+    # standard head dims (64) would never pass the generic contraction-dim
+    # threshold
+    which = resolve(backend, q.shape[-2])
+    return lookup("swa_attention", which)(q, k, v, window)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+register("factor_sum", "ref", _factor_sum_ref)
+register("factor_sum", "pallas", _factor_sum_pallas)
+register("block_precond_left", "ref", _precond_left_ref)
+register("block_precond_left", "pallas", _precond_left_pallas)
+register("block_precond_right", "ref", _precond_right_ref)
+register("block_precond_right", "pallas", _precond_right_pallas)
+register("damped_inverse", "ref", _damped_inverse_ref)
+register("swa_attention", "ref", _swa_ref)
+register("swa_attention", "pallas", _swa_pallas)

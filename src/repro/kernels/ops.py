@@ -7,6 +7,7 @@ real TPU set ``interpret=False`` (the default flips on backend detection).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +52,11 @@ def kfac_block_precond(binv: jax.Array, w: jax.Array, *, bm: int = 256,
     nb, b, _ = binv.shape
     m = w.shape[-1]
     bm_, bn_, bk_ = min(bm, b), min(bn, m), min(bk, b)
-    bp = -(-b // max(bm_, bk_)) * max(bm_, bk_)
+    # pad b to a multiple of BOTH tile sizes (their lcm): padding to
+    # max(bm_, bk_) misaligns the grid when bm_ != bk_ and the smaller tile
+    # doesn't divide the larger (the last tile then reads past the array)
+    tile = math.lcm(bm_, bk_)
+    bp = -(-b // tile) * tile
     mp = -(-m // bn_) * bn_
     if bp != b or mp != m:
         binv = jnp.pad(binv, ((0, 0), (0, bp - b), (0, bp - b)))
@@ -70,7 +75,7 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     interpret = _default_interpret() if interpret is None else interpret
     bh, s, hd = q.shape
     bq_, bk_ = min(bq, s), min(bk, s)
-    bt = max(bq_, bk_)
+    bt = math.lcm(bq_, bk_)          # same grid-alignment rule as above
     sp = -(-s // bt) * bt
     if sp != s:
         pad = ((0, 0), (0, sp - s), (0, 0))

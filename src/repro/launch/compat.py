@@ -1,0 +1,66 @@
+"""Version shims for the JAX APIs the launch layer uses.
+
+The repo targets the current JAX surface (``jax.shard_map``, ``jax.set_mesh``,
+``jax.sharding.AxisType``, dict-valued ``Compiled.cost_analysis``); this
+container ships jax 0.4.x where those are still under ``jax.experimental`` or
+spelled differently. Every call site goes through this module so the rest of
+the codebase reads as if it were written against one API.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    if _HAS_AXIS_TYPES:
+        types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # 0.4.x: Mesh itself is the context manager
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              axis_names: set) -> Callable:
+    """Partial-manual shard_map: ``axis_names`` are manual, the rest stay
+    compiler-managed (GSPMD). Replication checking is off — the SP-NGD
+    schedule's out_specs mix scattered and replicated results on purpose."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(axis_names),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - set(axis_names)
+    if auto:
+        # Partial-manual (GSPMD inside the region) trips an XLA partitioner
+        # CHECK ("sharding.IsManualSubgroup()") on this toolchain — run fully
+        # manual instead. Axes outside ``axis_names`` are untouched by the
+        # body's collectives and by the in/out specs, so results replicate
+        # across them and numerics are identical; only compiler-managed TP
+        # inside the region is lost on this jax version.
+        auto = frozenset()
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict (0.4.x returns a
+    per-device list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -32,6 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, list_archs, INPUT_SHAPES
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.ngd import NGDConfig, SPNGD
+from repro.launch import compat
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (analyze_hlo, roofline_terms,
@@ -85,13 +86,18 @@ def active_param_fraction(cfg: ArchConfig) -> float:
 
 def build_case(arch: str, shape_name: str, mesh, *,
                schedule: str = "auto", tp_align: bool = False,
-               rwkv_chunk: int = 0, fast: bool = False):
+               rwkv_chunk: int = 0, fast: bool = False,
+               backend: str = "auto"):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
     explicit 5-stage Algorithm 3). tp_align: factor blocks aligned to TP
-    shard boundaries (beyond-paper, DESIGN.md §4)."""
+    shard boundaries (beyond-paper, DESIGN.md §4). backend: kernel backend
+    for the hot paths (repro.kernels.dispatch) — threaded through both the
+    jit and shard_map schedules via the arch config and NGDConfig."""
     cfg = effective_config(arch, shape_name)
+    if backend != "auto":
+        cfg = dataclasses.replace(cfg, backend=backend)
     if tp_align:
         cfg = dataclasses.replace(cfg, tp_shards=mesh.shape["model"])
     if rwkv_chunk:
@@ -141,7 +147,7 @@ def build_case(arch: str, shape_name: str, mesh, *,
 
     if shape.kind == "train":
         opt = SPNGD(model.loss, model.site_infos(), model.fstats,
-                    model.site_counts, NGDConfig(),
+                    model.site_counts, NGDConfig(backend=cfg.backend),
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
@@ -207,25 +213,25 @@ def build_case(arch: str, shape_name: str, mesh, *,
 def run_case(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: Optional[str] = None, schedule: str = "auto",
              tp_align: bool = False, rwkv_chunk: int = 0,
-             fast: bool = False) -> dict:
+             fast: bool = False, backend: str = "auto") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
     t0 = time.time()
     rec = {"arch": arch, "shape": shape_name, "schedule": schedule,
-           "tp_align": tp_align,
+           "tp_align": tp_align, "backend": backend,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             step, args, n_params, label = build_case(
                 arch, shape_name, mesh, schedule=schedule, tp_align=tp_align,
-                rwkv_chunk=rwkv_chunk, fast=fast)
+                rwkv_chunk=rwkv_chunk, fast=fast, backend=backend)
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
             t2 = time.time()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             hlo = compiled.as_text()
         ana = analyze_hlo(hlo)
         # the compiled module is the per-device SPMD program: scale to global
@@ -303,6 +309,8 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--schedule", default="auto", choices=["auto", "shardmap"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["ref", "pallas", "auto"])
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -317,6 +325,8 @@ def main():
     variant = ""
     if args.schedule != "auto":
         variant += f"__{args.schedule}"
+    if args.backend != "auto":
+        variant += f"__{args.backend}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -336,7 +346,8 @@ def main():
                             if args.save_hlo else None)
                 rec = run_case(arch, shape, mp, save_hlo=hlo_path,
                                schedule=args.schedule, tp_align=args.tp_align,
-                               rwkv_chunk=args.rwkv_chunk, fast=args.fast)
+                               rwkv_chunk=args.rwkv_chunk, fast=args.fast,
+                               backend=args.backend)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -8,23 +8,19 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
-import jax
-
-
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.launch import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count
     >= data*model in the test process)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ngd import SPNGD
+from repro.launch import compat
 
 
 def make_train_step(model, opt: SPNGD, accum: int = 1) -> Callable:
@@ -196,11 +197,11 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
         counts = model.site_counts(batch)
         batch_specs = jax.tree.map(
             lambda x: P(dp, *(None,) * (x.ndim - 1)), batch)
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             inner, mesh=mesh,
             in_specs=(P(), batch_specs),
             out_specs=(P(), P(), _raw_specs()),
-            axis_names=set(dp), check_vma=False)
+            axis_names=set(dp))
         loss, grads, raw = sm(params, batch)
         return opt.apply_update(params, opt_state, grads, raw, counts,
                                 flags, lam, lr, mom, loss, {})
@@ -251,9 +252,8 @@ def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
     def fast_step(params, opt_state, batch, lam, lr, mom):
         batch_specs = jax.tree.map(
             lambda x: P(dp, *(None,) * (x.ndim - 1)), batch)
-        sm = jax.shard_map(inner, mesh=mesh, in_specs=(P(), batch_specs),
-                           out_specs=(P(), P()), axis_names=set(dp),
-                           check_vma=False)
+        sm = compat.shard_map(inner, mesh=mesh, in_specs=(P(), batch_specs),
+                              out_specs=(P(), P()), axis_names=set(dp))
         loss, grads = sm(params, batch)
         return opt._finish(params, opt_state, grads, opt_state["curv"],
                            lam, lr, mom, loss, {}, {})
@@ -298,14 +298,21 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=2e-2)
     ap.add_argument("--damping", type=float, default=2.5e-4)
+    ap.add_argument("--backend", default="auto",
+                    choices=["ref", "pallas", "auto"],
+                    help="kernel backend for the SP-NGD hot paths "
+                         "(repro.kernels.dispatch)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
+
+    import dataclasses
 
     from repro.core.ngd import NGDConfig, SPNGD
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, backend=args.backend)
     model = DecoderLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree.leaves(params))
@@ -313,7 +320,8 @@ def main():
           f"{n / 1e6:.1f}M params")
 
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
-                model.site_counts, NGDConfig(damping=args.damping))
+                model.site_counts, NGDConfig(damping=args.damping,
+                                             backend=args.backend))
     state = opt.init(params)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
                               bytes_per_stat=opt.stat_bytes())

@@ -4,17 +4,61 @@ support, and a KV-cache decode path.
 The chunked implementation never materializes the (Sq, Sk) score matrix —
 it scans KV chunks with a running (max, denominator, accumulator) triple.
 This is the pure-JAX reference; ``repro.kernels.swa_attention`` is the Pallas
-TPU kernel for the same contraction.
+TPU kernel for the same contraction, and :func:`attention` routes to it via
+``repro.kernels.dispatch`` when the call is kernel-eligible (causal
+self-attention over the whole sequence — no cache, no offset) and the
+``backend`` knob resolves to ``"pallas"``.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def _kernel_eligible(causal: bool, q_offset, kv_len, sq: int, sk: int) -> bool:
+    """The Pallas kernel covers exactly the training self-attention case:
+    causal, full sequence (no KV cache slice, no decode offset)."""
+    return (causal and kv_len is None and sq == sk
+            and isinstance(q_offset, int) and q_offset == 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _pallas_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int) -> jax.Array:
+    """(B, S, H, hd) GQA layout -> flatten heads into batch for the kernel.
+
+    The kernel is forward-only; the VJP recomputes attention through the
+    chunked pure-JAX path (identical masking semantics), so training works
+    with the Pallas forward today. A fused backward kernel is a ROADMAP item.
+    """
+    from repro.kernels import dispatch
+    b, s, h, hd = q.shape
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    out = dispatch.swa_attention(qf, kf, vf, window=window, backend="pallas")
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+
+def _pallas_attention_fwd(q, k, v, window):
+    return _pallas_attention(q, k, v, window), (q, k, v)
+
+
+def _pallas_attention_bwd(window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention(q, k, v, causal=True, window=window,
+                                  backend="ref"), q, k, v)
+    return vjp(g)
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
 
 
 def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
@@ -28,7 +72,8 @@ def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, window: int = 0, q_offset=0,
               kv_len: Optional[jax.Array] = None,
-              chunk: int = 1024) -> jax.Array:
+              chunk: int = 1024,
+              backend: Optional[str] = None) -> jax.Array:
     """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd).
 
     ``q_offset``: absolute position of q[0] (decode: cache length).
@@ -36,11 +81,20 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     cache); None = all of Sk.
     ``window``: sliding-window size (0 = full); key j is visible to query i
     iff  i - window < j <= i  (Mixtral-style).
+    ``backend``: kernel backend knob ("ref" | "pallas" | "auto"); eligible
+    calls resolving to "pallas" run the Pallas flash kernel, everything else
+    takes the chunked pure-JAX path below.
     """
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]
     k = _repeat_kv(k, h // kv)
     v = _repeat_kv(v, h // kv)
+    if _kernel_eligible(causal, q_offset, kv_len, sq, sk):
+        from repro.kernels import dispatch
+        # seq-only gate: see dispatch.swa_attention (flash attention is
+        # bandwidth-bound; hd=64 heads must not disqualify the kernel)
+        if dispatch.resolve(backend, sq) == "pallas":
+            return _pallas_attention(q, k, v, window)
     scale = hd ** -0.5
     qf = (q * scale).astype(jnp.float32)
     q_pos = q_offset + jnp.arange(sq)

@@ -45,11 +45,13 @@ class DecoderLM:
         self.act_hook = None
         # Optional MoE dispatch-buffer sharding constraint (launch layer).
         self.moe_hook = None
-        self.spec = FactorSpec(max_dim=cfg.kfac_max_dim)
+        self.spec = FactorSpec(max_dim=cfg.kfac_max_dim, backend=cfg.backend)
         self.head_spec = FactorSpec(g_kind=cfg.head_g_kind,
-                                    max_dim=cfg.kfac_max_dim)
+                                    max_dim=cfg.kfac_max_dim,
+                                    backend=cfg.backend)
         self.embed_spec = FactorSpec(a_kind="diag", g_kind="full",
-                                     max_dim=cfg.kfac_max_dim)
+                                     max_dim=cfg.kfac_max_dim,
+                                     backend=cfg.backend)
         self.specs = self._block_site_specs()
 
     def _tp_spec(self, d_in: int, d_out: int, *, a_tp: bool = False,
@@ -77,7 +79,8 @@ class DecoderLM:
 
         a_max = aligned(d_in) if (tp and a_tp) else 0
         g_max = aligned(d_out) if (tp and g_tp) else 0
-        return FactorSpec(max_dim=cfg.kfac_max_dim, a_max=a_max, g_max=g_max)
+        return FactorSpec(max_dim=cfg.kfac_max_dim, a_max=a_max, g_max=g_max,
+                          backend=cfg.backend)
 
     def _spec_sub(self, prefix: str) -> dict:
         return {k[len(prefix):]: v for k, v in self.specs.items()
@@ -233,10 +236,12 @@ class DecoderLM:
                                                      cache_len, axis=1)
             out = attn_lib.attention(q, ck, cv, causal=True, window=win,
                                      q_offset=cache_len,
-                                     kv_len=cache_len + s)
+                                     kv_len=cache_len + s,
+                                     backend=cfg.backend)
             new_cache = (ck, cv)
         else:
-            out = attn_lib.attention(q, k, v, causal=True, window=win)
+            out = attn_lib.attention(q, k, v, causal=True, window=win,
+                                     backend=cfg.backend)
             new_cache = None
         o = tagging.dense_site(out.reshape(b, s, h * hd), p["wo"], g("wo"),
                                sp["attn_wo"])

@@ -1,0 +1,61 @@
+"""``hypothesis`` when installed, else a tiny deterministic fallback.
+
+The property tests only need ``given`` + ``settings`` + two strategies
+(``integers``, ``sampled_from``). On a bare environment (no hypothesis) this
+shim samples a small, seeded set of examples instead of skipping the tests
+outright — less shrinking power, same coverage intent. Import as::
+
+    from hypothesis_compat import given, settings, st
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    # keep the bare-env sweep small: every distinct shape re-traces the jitted
+    # kernels, so example count dominates the suite's wall time
+    _MAX_FALLBACK_EXAMPLES = 4
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would expose the
+            # strategy parameters as the signature and pytest would look for
+            # fixtures named after them
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", 10),
+                        _MAX_FALLBACK_EXAMPLES)
+                rng = random.Random(1234)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(**draw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

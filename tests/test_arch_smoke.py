@@ -14,6 +14,13 @@ from repro.models.transformer import DecoderLM
 
 LM_ARCHS = [a for a in list_archs() if a != "resnet50"]
 
+# full per-arch train-step sweep is the most expensive part of the suite:
+# keep one dense representative in the default run, mark the rest slow
+_TRAIN_STEP_FAST = ("llama3_2_1b",)
+_TRAIN_STEP_ARCHS = [a if a in _TRAIN_STEP_FAST
+                     else pytest.param(a, marks=pytest.mark.slow)
+                     for a in LM_ARCHS]
+
 
 def _batch(cfg, b=2, s=16, seed=0):
     rng = np.random.RandomState(seed)
@@ -37,7 +44,7 @@ def test_forward_shapes_and_finite(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("arch", _TRAIN_STEP_ARCHS)
 def test_one_spngd_train_step(arch):
     cfg = get_config(arch).reduced()
     m = DecoderLM(cfg)
@@ -74,7 +81,9 @@ def test_decode_step(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ["llama3_2_1b", "rwkv6_7b", "hymba_1_5b"])
+@pytest.mark.parametrize("arch", [
+    "llama3_2_1b", "rwkv6_7b",
+    pytest.param("hymba_1_5b", marks=pytest.mark.slow)])
 def test_prefill_then_decode_consistency(arch):
     """Decoding token-by-token must match the teacher-forced forward."""
     cfg = get_config(arch).reduced()
@@ -94,6 +103,7 @@ def test_prefill_then_decode_consistency(arch):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 def test_resnet_smoke():
     from repro.configs import get_config
     from repro.models.resnet import ConvNet

@@ -1,10 +1,11 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
-shape/dtype sweeps + hypothesis property tests."""
+shape/dtype sweeps + hypothesis property tests (deterministic fallback when
+hypothesis isn't installed — see hypothesis_compat)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 

@@ -110,6 +110,7 @@ def xent_loss_fn(params, fstats, batch):
     return nll, {"logits": logits}
 
 
+@pytest.mark.slow
 def test_ngd_beats_sgd_in_steps():
     """Paper Fig. 1 analogue: at an equal step budget with per-optimizer lr
     tuning, NGD reaches lower cross-entropy than SGD."""
@@ -183,6 +184,7 @@ def test_step_fast_matches_step_with_all_flags_off():
                  p1, p2)
 
 
+@pytest.mark.slow
 def test_emp_and_1mc_preconditioners_close():
     """Paper §7.4: emp vs 1mc show no behavioural difference. At toy scale we
     check the preconditioners are within a modest factor (they estimate

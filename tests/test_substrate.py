@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import get_config, INPUT_SHAPES
 from repro.core.stale import sym_packed_bytes
@@ -135,7 +135,7 @@ def test_chunked_ssm_matches_plain():
 def test_chunked_scan_grads_match():
     """remat'd chunked scan must give the same gradients."""
     import dataclasses
-    cfg0 = get_config("rwkv6_7b").reduced()
+    cfg0 = get_config("rwkv6_7b").reduced(head_dim=32, d_ff=128, vocab=256)
     m0 = DecoderLM(cfg0)
     m1 = DecoderLM(dataclasses.replace(cfg0, scan_chunk=8))
     params = m0.init(jax.random.PRNGKey(1))
