@@ -6,6 +6,13 @@ of TPU performance; we report the jnp-oracle time as the timing column and
 the kernel-vs-oracle max |err| as the derived column (the correctness
 contract the TPU kernel must meet).
 
+Attention-backward A/B: the retired recompute-through-ref custom VJP
+(rebuilt locally as the baseline) against the fused dq/dk/dv Pallas backward
+now on the training path, compared by XLA cost-analysis FLOPs of the full
+gradient computation (identical forwards, so the delta is the backward) and
+by wall time. The FLOP counts are the durable signal on CPU — interpret-mode
+wall time is Python emulation.
+
 E2E section: a full SP-NGD ``train_step`` timed once per dispatch backend
 (``ref`` vs ``pallas``), so every PR records the step-time delta of routing
 the hot paths through the kernels. ``run()`` also stashes the measurements in
@@ -15,6 +22,7 @@ the hot paths through the kernels. ``run()`` also stashes the measurements in
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +68,59 @@ def _bench_train_step(backend: str, quick: bool):
     return t, loss
 
 
+def _bench_attn_bwd(quick: bool):
+    """A/B the attention backward: recompute-through-ref VJP (the scheme
+    this repo shipped before the fused kernels) vs the fused Pallas
+    dq/dk/dv backward. Returns {name: {us, flops, bwd_flops}}."""
+    from repro.launch import compat
+    from repro.models import attention as attn_lib
+
+    b, s, h, kv, hd, w = ((2, 64, 4, 2, 16, 16) if quick
+                          else (2, 128, 8, 2, 32, 32))
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, s, h, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kv, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kv, hd), jnp.float32)
+
+    # the retired scheme, rebuilt as the baseline: Pallas forward, backward
+    # re-runs the whole chunked ref attention under jax.vjp
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+    def recompute_attn(q, k, v, window):
+        return attn_lib.attention(q, k, v, window=window, backend="pallas")
+
+    def _fwd(q, k, v, window):
+        return recompute_attn(q, k, v, window), (q, k, v)
+
+    def _bwd(window, res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(lambda q, k, v: attn_lib.attention(
+            q, k, v, causal=True, window=window, backend="ref"), q, k, v)
+        return vjp(g)
+
+    recompute_attn.defvjp(_fwd, _bwd)
+
+    def loss_recompute(q, k, v):
+        return jnp.sum(recompute_attn(q, k, v, w) ** 2)
+
+    def loss_fused(q, k, v):
+        return jnp.sum(attn_lib.attention(q, k, v, window=w,
+                                          backend="pallas") ** 2)
+
+    out = {}
+    fwd_flops = None
+    for name, loss in (("recompute", loss_recompute), ("fused", loss_fused)):
+        if fwd_flops is None:
+            cf = jax.jit(loss).lower(q, k, v).compile()
+            fwd_flops = compat.cost_analysis(cf).get("flops", 0.0)
+        g = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        cg = g.lower(q, k, v).compile()
+        flops = compat.cost_analysis(cg).get("flops", 0.0)
+        t = time_fn(g, q, k, v, warmup=1, iters=3)
+        out[name] = {"us": t, "flops": flops,
+                     "bwd_flops": max(flops - fwd_flops, 0.0)}
+    return out
+
+
 def run(quick: bool = False):
     out = []
     LAST_RESULTS.clear()
@@ -95,6 +156,21 @@ def run(quick: bool = False):
         - ref.swa_attention_ref(q, k, v, window=win))))
     LAST_RESULTS["kernel.swa_attention"] = {"us": t, "maxerr": err}
     out.append(row("kernel.swa_attention", t, f"maxerr={err:.2e}"))
+
+    # ---- attention backward A/B: recompute-through-ref VJP vs fused ----
+    ab = _bench_attn_bwd(quick)
+    for name, rec in ab.items():
+        LAST_RESULTS[f"attn_bwd.{name}"] = rec
+        out.append(row(f"attn_bwd.{name}", rec["us"],
+                       f"bwd_flops={rec['bwd_flops']:.3g}"))
+    ratio = (ab["fused"]["bwd_flops"] / ab["recompute"]["bwd_flops"]
+             if ab["recompute"]["bwd_flops"] else float("nan"))
+    LAST_RESULTS["attn_bwd.fused_over_recompute"] = {
+        "flops_ratio": ratio,
+        "us_ratio": ab["fused"]["us"] / ab["recompute"]["us"],
+    }
+    out.append(row("attn_bwd.fused_over_recompute", 0.0,
+                   f"flops_ratio={ratio:.3f}"))
 
     # ---- end-to-end dispatch A/B: full train_step per backend ----
     for backend in ("ref", "pallas"):

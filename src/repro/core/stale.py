@@ -8,11 +8,18 @@ Host-side controller: per *statistic* (each factor family's "a", "g", "d",
     delta_m1  previous interval
 
 Algorithm 2, driven by Frobenius similarity measured on-device at refresh
-time (``sim1 = ||X - X_-1||_F/||X_-1||_F``, ``sim2`` vs ``X_-2``):
+time (``sim1 = ||X - X_-1||_F/||X_-1||_F``, ``sim2`` vs ``X_-2``). The
+recurrence is over interval *generations* (§4.3): ``delta`` is the interval
+that just elapsed, ``delta_m1`` (the paper's Δ₋₁) the one before it — the
+last interval that was validated before the current (tentative) growth step:
 
     if   sim1 >= alpha:  delta <- max(1, floor(delta_m1 / 2))   # shrink
-    elif sim2 >= alpha:  delta <- delta_m1                      # hold
-    else:                delta <- delta_m1 + delta_m2           # Fibonacci grow
+    elif sim2 >= alpha:  delta <- delta_m1                      # fall back
+    else:                delta <- delta + delta_m1              # Fibonacci grow
+
+Shrink/fall-back restart from Δ₋₁ (the just-elapsed Δ was too aggressive);
+growth extends the streak, giving the Fibonacci sequence 1, 1, 2, 3, 5, …
+when X keeps drifting slowly.
 
 The device side stores X_-1 / X_-2 inside the optimizer state and evaluates
 the two distances only on refresh steps (inside the ``lax.cond``); the
@@ -70,18 +77,18 @@ class IntervalController:
             if not flags.get(name, False):
                 continue
             d1, d2 = sims[name]
-            delta_m2 = st.delta_m1
-            delta_m1 = st.delta
-            # Algorithm 2
+            # Algorithm 2: shrink/fall-back compute from the PREVIOUS
+            # interval Δ₋₁ (st.delta_m1), not the just-elapsed st.delta —
+            # growth is tentative until the similarity check validates it
             if d1 >= self.alpha:
-                delta = max(1, delta_m1 // 2)
+                delta = max(1, st.delta_m1 // 2)
             elif d2 >= self.alpha:
-                delta = delta_m1
+                delta = st.delta_m1
             else:
-                delta = delta_m1 + delta_m2
+                delta = st.delta + st.delta_m1
             if self.max_interval:
                 delta = min(delta, self.max_interval)
-            st.delta_m1 = delta_m1
+            st.delta_m1 = st.delta
             st.delta = delta
             st.t_next = t + delta
             st.refresh_count += 1

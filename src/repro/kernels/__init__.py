@@ -1,2 +1,4 @@
-from repro.kernels.ops import kfac_factor, kfac_block_precond, swa_attention
+from repro.kernels.ops import (kfac_factor, kfac_block_precond,
+                               swa_attention, swa_attention_fwd_res,
+                               swa_attention_bwd)
 from repro.kernels import dispatch

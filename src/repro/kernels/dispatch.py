@@ -60,7 +60,10 @@ def register(op: str, backend: str, fn: Callable) -> None:
 
 
 def lookup(op: str, backend: str) -> Callable:
-    impls = _TABLE[op]
+    impls = _TABLE.get(op)
+    if impls is None:
+        raise KeyError(f"unregistered kernel op {op!r}; registered ops: "
+                       f"{sorted(_TABLE)}")
     return impls.get(backend, impls["ref"])
 
 
@@ -79,6 +82,11 @@ def resolve(backend: str | None, *dims: int) -> str:
         raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")
     if backend != "auto":
         return backend
+    if not dims:
+        # all(()) is True: a dims-less call would resolve to "pallas" on TPU
+        # unconditionally, sidestepping the MXU-worthiness gate
+        raise ValueError('resolve("auto") needs at least one shape dim '
+                         "(the quantities that predict the Pallas win)")
     if _on_tpu() and all(d >= MIN_PALLAS_DIM for d in dims):
         return "pallas"
     return "ref"
@@ -216,6 +224,62 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# swa_attention_fwd_res / swa_attention_bwd: the training path.
+#
+# GQA layout contract: q / o / do are (BKV, G, S, hd) — query heads grouped
+# by the KV head they attend through (head h = c*G + r maps to KV head c,
+# matching models.attention._repeat_kv) — and k / v / dk / dv are
+# (BKV, S, hd), i.e. KV is handed to the kernels UNEXPANDED. The forward
+# also returns the per-row logsumexp residual lse (BKV, G, S) f32; the
+# backward consumes (o, lse) instead of recomputing attention, and dk/dv
+# come back accumulated per KV head across the whole query-head group.
+# ---------------------------------------------------------------------------
+
+def _swa_fwd_res_ref(q, k, v, window: int):
+    from repro.kernels import ref
+    return ref.swa_attention_fwd_res_ref(q, k, v, window=window)
+
+
+def _swa_fwd_res_pallas(q, k, v, window: int):
+    from repro.kernels import ops
+    return ops.swa_attention_fwd_res(q, k, v, window=window)
+
+
+def _swa_bwd_ref(q, k, v, o, lse, do, window: int):
+    # the ref backward IS the recompute path: jax.vjp of the ref forward
+    # (o / lse are unused), so "pallas" still degrades gracefully op-by-op
+    from repro.kernels import ref
+
+    def fwd(q, k, v):
+        return ref.swa_attention_fwd_res_ref(q, k, v, window=window)[0]
+
+    _, vjp = jax.vjp(fwd, q, k, v)
+    dq, dk, dv = vjp(do.astype(o.dtype))
+    return (dq.astype(jnp.float32), dk.astype(jnp.float32),
+            dv.astype(jnp.float32))
+
+
+def _swa_bwd_pallas(q, k, v, o, lse, do, window: int):
+    from repro.kernels import ops
+    return ops.swa_attention_bwd(q, k, v, o, lse, do, window=window)
+
+
+def swa_attention_fwd_res(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          window: int = 0, backend: str | None = None):
+    """Training forward: returns (out, lse) in the GQA layout above."""
+    which = resolve(backend, q.shape[-2])
+    return lookup("swa_attention_fwd_res", which)(q, k, v, window)
+
+
+def swa_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                      o: jax.Array, lse: jax.Array, do: jax.Array, *,
+                      window: int = 0, backend: str | None = None):
+    """Fused backward from residuals: returns (dq, dk, dv), all f32."""
+    which = resolve(backend, q.shape[-2])
+    return lookup("swa_attention_bwd", which)(q, k, v, o, lse, do, window)
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -228,3 +292,7 @@ register("block_precond_right", "pallas", _precond_right_pallas)
 register("damped_inverse", "ref", _damped_inverse_ref)
 register("swa_attention", "ref", _swa_ref)
 register("swa_attention", "pallas", _swa_pallas)
+register("swa_attention_fwd_res", "ref", _swa_fwd_res_ref)
+register("swa_attention_fwd_res", "pallas", _swa_fwd_res_pallas)
+register("swa_attention_bwd", "ref", _swa_bwd_ref)
+register("swa_attention_bwd", "pallas", _swa_bwd_pallas)

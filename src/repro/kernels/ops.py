@@ -27,7 +27,9 @@ def kfac_factor(x: jax.Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
     """Symmetric factor A = X^T X (f32). The kernel fills only tiles with
     tile_i <= tile_j (symmetry-aware compute, DESIGN.md §6); this wrapper
     mirrors the strict-upper tiles and keeps diagonal tiles as computed."""
-    assert bm == bn, "diagonal tiles require square tiling"
+    if bm != bn:
+        raise ValueError(f"kfac_factor needs square tiling (diagonal tiles "
+                         f"are mirrored in place); got bm={bm}, bn={bn}")
     interpret = _default_interpret() if interpret is None else interpret
     n, d = x.shape
     bt = min(bm, d)
@@ -83,3 +85,69 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     out = _swa.swa_flash(q, k, v, window=window, bq=bq_, bk=bk_,
                          interpret=interpret)
     return out[:, :s, :]
+
+
+def _pad_seq(s: int, bq: int, bk: int) -> int:
+    """Padded sequence length: a multiple of BOTH tile sizes (their lcm)."""
+    tile = math.lcm(bq, bk)
+    return -(-s // tile) * tile
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def swa_attention_fwd_res(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          window: int = 0, bq: int = 256, bk: int = 256,
+                          interpret: bool | None = None):
+    """Residual-saving training forward, GQA layout: q (BKV, G, S, hd),
+    k/v (BKV, S, hd) — KV unexpanded, one kernel batch entry per KV head.
+    Returns (out (BKV, G, S, hd), lse (BKV, G, S) f32)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    bkv, g, s, hd = q.shape
+    bq_, bk_ = min(bq, s), min(bk, s)
+    sp = _pad_seq(s, bq_, bk_)
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sp - s), (0, 0)))
+        pad = ((0, 0), (0, sp - s), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    out, lse = _swa.swa_flash_fwd(q, k, v, window=window, bq=bq_, bk=bk_,
+                                  interpret=interpret)
+    return out[:, :, :s], lse[:, :, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
+                                             "interpret"))
+def swa_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                      o: jax.Array, lse: jax.Array, do: jax.Array, *,
+                      window: int = 0, bq: int = 256, bk: int = 256,
+                      interpret: bool | None = None):
+    """Fused backward from the saved (o, lse) residuals — no forward
+    recompute. Layouts as in :func:`swa_attention_fwd_res`; returns
+    (dq (BKV, G, S, hd), dk (BKV, S, hd), dv (BKV, S, hd)), all f32 with
+    dk/dv accumulated per KV head across the query-head group."""
+    interpret = _default_interpret() if interpret is None else interpret
+    bkv, g, s, hd = q.shape
+    bq_, bk_ = min(bq, s), min(bk, s)
+    # D_i = rowsum(do * o) once on the XLA side (FlashAttention-2 style):
+    # o then never enters the kernels' input streams, and the dk/dv sweep
+    # doesn't re-derive it per visited tile
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    sp = _pad_seq(s, bq_, bk_)
+    if sp != s:
+        qpad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        kpad = ((0, 0), (0, sp - s), (0, 0))
+        # NOTE the in-kernel k_pos < seq_len mask is vacuous here (the
+        # kernels see the padded length): padded KEY columns are hidden
+        # from real query rows by the causal mask alone (their positions
+        # are > every real q_pos). Padded QUERY rows do see real keys with
+        # p = exp(0 - 0) = 1, but contribute nothing because the zero-
+        # padded do/delta force ds = 0 and p^T @ do = 0 — the zero padding
+        # is load-bearing. The garbage dq rows are sliced off below.
+        q, do = jnp.pad(q, qpad), jnp.pad(do, qpad)
+        k, v = jnp.pad(k, kpad), jnp.pad(v, kpad)
+        rpad = ((0, 0), (0, 0), (0, sp - s))
+        lse, delta = jnp.pad(lse, rpad), jnp.pad(delta, rpad)
+    dq = _swa.swa_flash_bwd_dq(q, k, v, lse, delta, do, window=window,
+                               bq=bq_, bk=bk_, interpret=interpret)
+    dk, dv = _swa.swa_flash_bwd_dkdv(q, k, v, lse, delta, do, window=window,
+                                     bq=bq_, bk=bk_, interpret=interpret)
+    return dq[:, :, :s], dk[:, :s], dv[:, :s]

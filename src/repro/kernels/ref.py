@@ -33,3 +33,26 @@ def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def swa_attention_fwd_res_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                              window: int = 0):
+    """GQA training forward with residuals, materialized scores.
+    q: (BKV, G, S, hd); k, v: (BKV, S, hd) — KV per head, unexpanded.
+    Returns (out (BKV, G, S, hd), lse (BKV, G, S) f32)."""
+    bkv, g, s, hd = q.shape
+    scores = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = kp <= qp
+    if window:
+        mask &= kp > (qp - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    m = scores.max(-1)
+    p = jnp.exp(scores - m[..., None])
+    denom = p.sum(-1)
+    lse = m + jnp.log(denom)
+    out = jnp.einsum("bgqk,bkd->bgqd", p,
+                     v.astype(jnp.float32)) / denom[..., None]
+    return out.astype(q.dtype), lse

@@ -310,7 +310,9 @@ def main():
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--schedule", default="auto", choices=["auto", "shardmap"])
     ap.add_argument("--backend", default="auto",
-                    choices=["ref", "pallas", "auto"])
+                    choices=["ref", "pallas", "auto"],
+                    help="kernel backend (repro.kernels.dispatch); pallas "
+                         "includes the fused attention backward")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",

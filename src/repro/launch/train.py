@@ -301,7 +301,9 @@ def main():
     ap.add_argument("--backend", default="auto",
                     choices=["ref", "pallas", "auto"],
                     help="kernel backend for the SP-NGD hot paths "
-                         "(repro.kernels.dispatch)")
+                         "(repro.kernels.dispatch); pallas trains attention "
+                         "through the fused dq/dk/dv backward kernels "
+                         "(residual-saving forward, no recompute pass)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()

@@ -7,7 +7,11 @@ This is the pure-JAX reference; ``repro.kernels.swa_attention`` is the Pallas
 TPU kernel for the same contraction, and :func:`attention` routes to it via
 ``repro.kernels.dispatch`` when the call is kernel-eligible (causal
 self-attention over the whole sequence — no cache, no offset) and the
-``backend`` knob resolves to ``"pallas"``.
+``backend`` knob resolves to ``"pallas"``. The kernel route is trained
+through a custom VJP over the residual-saving forward
+(``swa_attention_fwd_res``) and the fused dq/dk/dv backward
+(``swa_attention_bwd``) — no recompute-through-ref pass — with KV handed to
+the kernels unexpanded (per-KV-head GQA layout).
 """
 
 from __future__ import annotations
@@ -28,34 +32,63 @@ def _kernel_eligible(causal: bool, q_offset, kv_len, sq: int, sk: int) -> bool:
             and isinstance(q_offset, int) and q_offset == 0)
 
 
+def _to_kernel_layout(q: jax.Array, k: jax.Array, v: jax.Array):
+    """(B, S, H, hd) q + (B, S, KV, hd) k/v -> the kernel's GQA layout:
+    q (B*KV, G, S, hd) with query head h = c*G + r grouped under KV head c
+    (the `_repeat_kv` convention), k/v (B*KV, S, hd) — UNEXPANDED, so the
+    kernel never sees the h/kv-times-inflated KV stream."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qg = q.transpose(0, 2, 1, 3).reshape(b * kv, h // kv, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    return qg, kf, vf
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _pallas_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       window: int) -> jax.Array:
-    """(B, S, H, hd) GQA layout -> flatten heads into batch for the kernel.
+    """(B, S, H, hd) q, (B, S, KV, hd) k/v -> (B, S, H, hd).
 
-    The kernel is forward-only; the VJP recomputes attention through the
-    chunked pure-JAX path (identical masking semantics), so training works
-    with the Pallas forward today. A fused backward kernel is a ROADMAP item.
+    Forward runs the residual-saving Pallas kernel (out + per-row logsumexp);
+    the VJP feeds those residuals to the fused dq/dk/dv kernels via
+    ``dispatch.swa_attention_bwd`` — no recompute-through-ref pass. dk/dv are
+    accumulated per KV head inside the kernel, so the gradients already carry
+    the sum over each query-head group.
     """
+    out, _ = _pallas_fwd_res(q, k, v, window)
+    return out
+
+
+def _pallas_fwd_res(q, k, v, window):
     from repro.kernels import dispatch
     b, s, h, hd = q.shape
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    out = dispatch.swa_attention(qf, kf, vf, window=window, backend="pallas")
-    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    qg, kf, vf = _to_kernel_layout(q, k, v)
+    out, lse = dispatch.swa_attention_fwd_res(qg, kf, vf, window=window,
+                                              backend="pallas")
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3), lse
 
 
 def _pallas_attention_fwd(q, k, v, window):
-    return _pallas_attention(q, k, v, window), (q, k, v)
+    out, lse = _pallas_fwd_res(q, k, v, window)
+    return out, (q, k, v, out, lse)
 
 
 def _pallas_attention_bwd(window, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q, k, v: attention(q, k, v, causal=True, window=window,
-                                  backend="ref"), q, k, v)
-    return vjp(g)
+    from repro.kernels import dispatch
+    q, k, v, out, lse = res
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qg, kf, vf = _to_kernel_layout(q, k, v)
+    # o and the cotangent share q's (B, S, H, hd) layout
+    og = out.transpose(0, 2, 1, 3).reshape(b * kv, h // kv, s, hd)
+    dog = g.transpose(0, 2, 1, 3).reshape(b * kv, h // kv, s, hd)
+    dq, dk, dv = dispatch.swa_attention_bwd(qg, kf, vf, og, lse, dog,
+                                            window=window, backend="pallas")
+    dq = dq.reshape(b, h, s, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = dk.reshape(b, kv, s, hd).transpose(0, 2, 1, 3).astype(k.dtype)
+    dv = dv.reshape(b, kv, s, hd).transpose(0, 2, 1, 3).astype(v.dtype)
+    return dq, dk, dv
 
 
 _pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
@@ -87,14 +120,16 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     """
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]
-    k = _repeat_kv(k, h // kv)
-    v = _repeat_kv(v, h // kv)
     if _kernel_eligible(causal, q_offset, kv_len, sq, sk):
         from repro.kernels import dispatch
         # seq-only gate: see dispatch.swa_attention (flash attention is
         # bandwidth-bound; hd=64 heads must not disqualify the kernel)
         if dispatch.resolve(backend, sq) == "pallas":
+            # KV stays unexpanded: the kernel layout carries the query-head
+            # group explicitly, so bandwidth/memory don't inflate by h/kv
             return _pallas_attention(q, k, v, window)
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
     scale = hd ** -0.5
     qf = (q * scale).astype(jnp.float32)
     q_pos = q_offset + jnp.arange(sq)

@@ -240,6 +240,10 @@ class DecoderLM:
                                      backend=cfg.backend)
             new_cache = (ck, cv)
         else:
+            # k/v stay at kv heads (unexpanded): the kernel-eligible route
+            # keeps them per-KV-head all the way into the Pallas kernels
+            # (GQA layout contract, see repro.kernels.dispatch); the chunked
+            # ref path expands inside attention()
             out = attn_lib.attention(q, k, v, causal=True, window=win,
                                      backend=cfg.backend)
             new_cache = None

@@ -1,0 +1,185 @@
+"""Fused Pallas backward for sliding-window attention.
+
+Three layers of coverage:
+
+* op level — ``dispatch.swa_attention_fwd_res`` / ``swa_attention_bwd``
+  parity between the ref (jax.vjp of the ref forward) and pallas (fused
+  dq/dk/dv kernels, interpret mode on CPU) backends in the GQA kernel
+  layout, including odd/padded sequence lengths and bf16 inputs.
+* model level — ``models.attention`` gradients, ref vs pallas route, over
+  the shape grid the ISSUE pins: odd/padded S, window ∈ {0, S/4}, GQA
+  ratios {1, 4}, bf16; plus a spy asserting the pallas VJP calls only the
+  fused backward ops (zero recompute-through-ref attention passes).
+* e2e — a 20-step SP-NGD train-loss parity run (reusing
+  ``test_backend_dispatch``'s fixture) on reduced mixtral — sliding-window
+  + MoE + GQA — driven through the new custom VJP.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops, ref
+from repro.models.attention import attention
+
+
+def _gqa_qkv(seed, bkv, g, s, hd, dtype=jnp.float32):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(bkv, g, s, hd), dtype)
+    k = jnp.asarray(rng.randn(bkv, s, hd), dtype)
+    v = jnp.asarray(rng.randn(bkv, s, hd), dtype)
+    return q, k, v
+
+
+def _tols(dtype):
+    # f32 carries the ISSUE's 1e-3 contract with lots of margin; bf16
+    # outputs/cotangents quantize at ~2^-8 so parity is ulp-bounded
+    return (1e-3, 1e-3) if dtype == jnp.float32 else (0.05, 0.05)
+
+
+# ---------------------------------------------------------------------------
+# op level: fwd_res + bwd, ref vs pallas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,window", [(64, 16), (50, 13), (33, 0), (33, 8)])
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwd_res_op_parity(s, window, g, dtype):
+    q, k, v = _gqa_qkv(s + window + g, 2, g, s, 16, dtype)
+    o_r, lse_r = dispatch.swa_attention_fwd_res(q, k, v, window=window,
+                                                backend="ref")
+    o_p, lse_p = dispatch.swa_attention_fwd_res(q, k, v, window=window,
+                                                backend="pallas")
+    assert o_p.shape == q.shape and o_p.dtype == q.dtype
+    assert lse_p.shape == q.shape[:-1] and lse_p.dtype == jnp.float32
+    rtol, atol = _tols(dtype)
+    np.testing.assert_allclose(np.asarray(o_r, np.float32),
+                               np.asarray(o_p, np.float32),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(lse_r, lse_p, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,window", [(64, 16), (50, 13), (33, 0)])
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bwd_op_parity(s, window, g, dtype):
+    q, k, v = _gqa_qkv(2 * s + window + g, 2, g, s, 16, dtype)
+    o, lse = dispatch.swa_attention_fwd_res(q, k, v, window=window,
+                                            backend="pallas")
+    rng = np.random.RandomState(1)
+    do = jnp.asarray(rng.randn(*o.shape), dtype)
+    grads_r = dispatch.swa_attention_bwd(q, k, v, o, lse, do, window=window,
+                                         backend="ref")
+    grads_p = dispatch.swa_attention_bwd(q, k, v, o, lse, do, window=window,
+                                         backend="pallas")
+    rtol, atol = _tols(dtype)
+    for name, a, b in zip(("dq", "dk", "dv"), grads_r, grads_p):
+        assert b.dtype == jnp.float32, name
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("s", [48, 50])
+def test_bwd_kernel_against_autodiff_oracle(s):
+    """The fused kernels must match jax.grad through the materialized-scores
+    oracle (not just the ref op) — guards the lse/delta algebra. s=50 with
+    16x16 tiles forces the lcm-padding branch (padded Q rows / K columns)
+    in both ops wrappers."""
+    q, k, v = _gqa_qkv(11, 2, 2, s, 16)
+    w = 12
+
+    def loss(q, k, v):
+        out, _ = ref.swa_attention_fwd_res_ref(q, k, v, window=w)
+        return jnp.sum(out ** 2)
+
+    dq_o, dk_o, dv_o = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    o, lse = ops.swa_attention_fwd_res(q, k, v, window=w, bq=16, bk=16,
+                                       interpret=True)
+    dq, dk, dv = ops.swa_attention_bwd(q, k, v, o, lse, 2.0 * o, window=w,
+                                       bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(dq, dq_o, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dk, dk_o, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dv, dv_o, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# model level: attention() gradients across the shape grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [33, 50, 64])
+@pytest.mark.parametrize("win_frac", [0, 4])
+@pytest.mark.parametrize("ratio", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_model_grad_parity_grid(s, win_frac, ratio, dtype):
+    window = s // win_frac if win_frac else 0
+    b, kv, hd = 2, 2, 16
+    h = kv * ratio
+    rng = np.random.RandomState(s * 7 + window + ratio)
+    q = jnp.asarray(rng.randn(b, s, h, hd), dtype)
+    k = jnp.asarray(rng.randn(b, s, kv, hd), dtype)
+    v = jnp.asarray(rng.randn(b, s, kv, hd), dtype)
+
+    def f(be):
+        return lambda q, k, v: jnp.sum(
+            attention(q, k, v, window=window, backend=be).astype(
+                jnp.float32) ** 2)
+
+    o_ref = attention(q, k, v, window=window, backend="ref")
+    o_pl = attention(q, k, v, window=window, backend="pallas")
+    rtol, atol = _tols(dtype)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pl, np.float32),
+                               rtol=rtol, atol=atol)
+    g_ref = jax.grad(f("ref"), argnums=(0, 1, 2))(q, k, v)
+    g_pl = jax.grad(f("pallas"), argnums=(0, 1, 2))(q, k, v)
+    for name, a, b_ in zip(("dq", "dk", "dv"), g_ref, g_pl):
+        assert b_.dtype == dtype, name
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=rtol, atol=atol, err_msg=name)
+
+
+def test_pallas_vjp_is_fused_no_ref_recompute(monkeypatch):
+    """backend="pallas" training must take ZERO recompute-through-ref
+    attention passes: the custom VJP may touch only the fwd_res/bwd ops."""
+    calls = []
+    orig = dispatch.lookup
+
+    def spy(op, backend):
+        calls.append((op, backend))
+        return orig(op, backend)
+
+    monkeypatch.setattr(dispatch, "lookup", spy)
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(1, 32, 4, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 32, 2, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 32, 2, 8), jnp.float32)
+    jax.grad(lambda q: jnp.sum(
+        attention(q, k, v, window=8, backend="pallas") ** 2))(q)
+    ops_hit = {op for op, _ in calls}
+    assert "swa_attention_fwd_res" in ops_hit
+    assert "swa_attention_bwd" in ops_hit
+    # the plain forward op (the old recompute target) must not be touched
+    assert "swa_attention" not in ops_hit
+
+
+# ---------------------------------------------------------------------------
+# e2e: 20-step SP-NGD train-loss parity through the fused backward
+# ---------------------------------------------------------------------------
+
+def test_train_20_steps_fused_bwd_matches_ref_moe_swa():
+    """Mirror of test_backend_dispatch's e2e (which covers reduced GQA
+    llama), on reduced mixtral instead: sliding-window attention + MoE +
+    GQA all routed through the fused backward."""
+    from test_backend_dispatch import _losses_jit
+    l_ref = _losses_jit("ref", arch="mixtral_8x22b")
+    l_pl = _losses_jit("pallas", arch="mixtral_8x22b")
+    assert np.isfinite(l_pl).all()
+    assert l_pl[-1] < l_pl[0]
+    # the fused backward is not bit-identical to ref (different reduction
+    # order) and this overfit fixture is chaotic past ~step 8; a wrong
+    # gradient breaks the prefix immediately (see test_backend_dispatch)
+    np.testing.assert_allclose(l_ref[:8], l_pl[:8], rtol=1e-3, atol=1e-3)
+    # mixtral's chaotic tail bounces higher than llama's (MoE aux loss);
+    # "stays trained" means well below the ~6.3 starting loss
+    assert max(l_ref[8:]) < 2.0 and max(l_pl[8:]) < 2.0

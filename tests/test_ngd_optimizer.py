@@ -226,26 +226,49 @@ def test_emp_and_1mc_preconditioners_close():
 
 
 def test_interval_controller_algorithm2():
+    """Algorithm 2's recurrence runs over interval GENERATIONS: shrink and
+    fall-back compute from the previous interval Δ₋₁ (the last validated
+    one), not from the just-elapsed, tentatively-grown Δ."""
     ctrl = IntervalController(["x"], alpha=0.1)
     # t=1: must refresh (t_X initialized to 1)
     assert ctrl.flags(1)["x"]
-    # dissimilar to prev -> halve (from 1 -> stays 1)
+    # dissimilar to prev -> halve Δ₋₁: max(1, 1//2) = 1
     ctrl.update(1, {"x": True}, {"x": (0.5, 0.5)})
     assert ctrl.stats["x"].t_next == 2
-    # similar to both -> Fibonacci growth: delta = 1 + 1 = 2
+    # similar to both -> Fibonacci growth: Δ + Δ₋₁ = 1 + 1 = 2
     ctrl.update(2, {"x": True}, {"x": (0.01, 0.02)})
     assert ctrl.stats["x"].delta == 2
     assert ctrl.stats["x"].t_next == 4
     assert not ctrl.flags(3)["x"]
-    # similar to prev, dissimilar to prev2 -> hold delta
-    ctrl.update(4, {"x": True}, {"x": (0.05, 0.5)})
+    # grow twice more: 2 + 1 = 3, then 3 + 2 = 5
+    ctrl.update(4, {"x": True}, {"x": (0.01, 0.01)})
+    assert ctrl.stats["x"].delta == 3
+    ctrl.update(7, {"x": True}, {"x": (0.01, 0.01)})
+    assert ctrl.stats["x"].delta == 5
+    assert ctrl.stats["x"].t_next == 12
+    # similar to prev, dissimilar to prev2 -> the grown Δ=5 was too
+    # aggressive: fall back to the previous interval Δ₋₁ = 3
+    ctrl.update(12, {"x": True}, {"x": (0.05, 0.5)})
+    assert ctrl.stats["x"].delta == 3
+    # dissimilar to prev -> halve the PREVIOUS interval (Δ₋₁ = 5 now,
+    # the generation before the fall-back): max(1, 5//2) = 2
+    ctrl.update(15, {"x": True}, {"x": (0.9, 0.9)})
     assert ctrl.stats["x"].delta == 2
-    # grow again: delta = 2 + 2 = 4
-    ctrl.update(6, {"x": True}, {"x": (0.01, 0.01)})
-    assert ctrl.stats["x"].delta == 4
-    # dissimilar -> halve: max(1, 4//2) = 2
-    ctrl.update(10, {"x": True}, {"x": (0.9, 0.9)})
-    assert ctrl.stats["x"].delta == 2
+
+
+def test_interval_controller_fibonacci_growth():
+    """Slowly-drifting statistics must produce the paper's §4.3 Fibonacci
+    interval sequence 1, 1, 2, 3, 5, 8, ... (pinned)."""
+    ctrl = IntervalController(["x"], alpha=0.1)
+    st = ctrl.stats["x"]
+    seq = [st.delta_m1, st.delta]                 # seed generations: 1, 1
+    t = st.t_next
+    for _ in range(6):
+        assert ctrl.flags(t)["x"]
+        ctrl.update(t, {"x": True}, {"x": (0.0, 0.0)})
+        seq.append(st.delta)
+        t = st.t_next
+    assert seq == [1, 1, 2, 3, 5, 8, 13, 21]
 
 
 def test_interval_controller_reduction_accounting():
