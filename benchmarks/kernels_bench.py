@@ -157,6 +157,42 @@ def run(quick: bool = False):
     LAST_RESULTS["kernel.swa_attention"] = {"us": t, "maxerr": err}
     out.append(row("kernel.swa_attention", t, f"maxerr={err:.2e}"))
 
+    # ---- fp8 pack/unpack: ref-vs-pallas A/B + stale-memory ratio ----
+    from repro.core.stale import stat_payload_bytes
+    from repro.kernels import dispatch
+
+    nbq, bq = (2, 48) if quick else (4, 96)
+    fq = rng.randn(nbq, bq, bq).astype(np.float32)
+    fq = jnp.asarray(fq + np.swapaxes(fq, -1, -2))
+    pack_ref = jax.jit(lambda f: dispatch.fp8_pack(f, backend="ref"))
+    t = time_fn(pack_ref, fq)
+    pay_r, sc_r = pack_ref(fq)
+    pay_p, sc_p = dispatch.fp8_pack(fq, backend="pallas")
+    err = max(float(jnp.max(jnp.abs(pay_r.astype(jnp.float32)
+                                    - pay_p.astype(jnp.float32)))),
+              float(jnp.max(jnp.abs(sc_r - sc_p))))
+    LAST_RESULTS["kernel.fp8_pack"] = {"us": t, "maxerr": err}
+    out.append(row("kernel.fp8_pack", t, f"maxerr={err:.2e}"))
+
+    unpack_ref = jax.jit(lambda p, s: dispatch.fp8_unpack(p, s, bq,
+                                                          backend="ref"))
+    t = time_fn(unpack_ref, pay_r, sc_r)
+    err = float(jnp.max(jnp.abs(
+        unpack_ref(pay_r, sc_r)
+        - dispatch.fp8_unpack(pay_p, sc_p, bq, backend="pallas"))))
+    LAST_RESULTS["kernel.fp8_unpack"] = {"us": t, "maxerr": err}
+    out.append(row("kernel.fp8_unpack", t, f"maxerr={err:.2e}"))
+
+    # resident/communicated bytes of the fp8 payload vs dense fp32 for one
+    # sym-packed factor of this shape (paper §4.3 + §5.2 on top of packing)
+    fp8_b = stat_payload_bytes(fq.shape, "fp8_e4m3")
+    f32_b = int(np.prod(fq.shape)) * 4
+    LAST_RESULTS["stale_memory.fp8_over_fp32"] = {
+        "ratio": fp8_b / f32_b, "fp8_bytes": fp8_b, "fp32_dense_bytes": f32_b,
+    }
+    out.append(row("stale_memory.fp8_over_fp32", 0.0,
+                   f"ratio={fp8_b / f32_b:.3f}"))
+
     # ---- attention backward A/B: recompute-through-ref VJP vs fused ----
     ab = _bench_attn_bwd(quick)
     for name, rec in ab.items():

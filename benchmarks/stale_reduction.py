@@ -80,6 +80,20 @@ def run(quick: bool = False):
             full += int(np.prod(leaf.shape)) * 4
     out.append(row("sec52.sym_packing_saving", 0.0,
                    f"packed/full={packed / full:.3f}"))
+    # true payload bytes per factor storage dtype: stat_bytes threads
+    # NGDConfig.factor_dtype through the ledger, so the reduce-scatter /
+    # stale-memory accounting reflects what would actually move (fp8 =
+    # sym-packed payload + per-block f32 scales; repro.quant)
+    by_dtype = {}
+    for name, fd in (("f32", jnp.float32), ("bf16", jnp.bfloat16),
+                     ("fp8", "fp8_e4m3")):
+        o = SPNGD(model.loss, model.site_infos(), model.fstats,
+                  model.site_counts, NGDConfig(factor_dtype=fd))
+        by_dtype[name] = sum(o.stat_bytes().values())
+        out.append(row(f"table2.payload_bytes_{name}", 0.0,
+                       f"bytes={by_dtype[name]}"))
+    out.append(row("table2.payload_fp8_over_f32", 0.0,
+                   f"ratio={by_dtype['fp8'] / by_dtype['f32']:.3f}"))
     return out
 
 

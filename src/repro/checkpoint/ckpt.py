@@ -3,6 +3,12 @@
 Handles params, optimizer state (including the curvature factors / inverses,
 so a restore resumes with warm statistics — important because Algorithm 1's
 intervals assume continuity), and host-side controller state (JSON).
+
+Extension dtypes (bf16, the fp8 factor-history payloads) are NOT preserved
+by ``np.savez`` — they reload as opaque void dtypes — so leaves with an
+ml_dtypes dtype are stored as unsigned-int bit views with the true dtype
+name appended to the key (``...|payload@float8_e4m3fn``); restore views the
+bits back. Bit-exact round trip for every dtype in the tree.
 """
 
 from __future__ import annotations
@@ -15,20 +21,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# numpy-native kinds that np.savez round-trips faithfully
+_NATIVE_KINDS = frozenset("fiub")
+
 
 def _flatten(tree: Any, prefix: str = "") -> dict:
     out = {}
     if isinstance(tree, dict):
         for k in sorted(tree):
+            if "@" in k or "|" in k:
+                raise ValueError(f"checkpoint key {k!r} may not contain "
+                                 f"'@' or '|' (reserved separators)")
             out.update(_flatten(tree[k], f"{prefix}{k}|"))
     else:
-        out[prefix[:-1]] = np.asarray(tree)
+        leaf = np.asarray(tree)
+        if leaf.dtype.kind not in _NATIVE_KINDS:      # ml_dtypes extension
+            name = leaf.dtype.name
+            leaf = leaf.view(np.dtype(f"u{leaf.dtype.itemsize}"))
+            out[f"{prefix[:-1]}@{name}"] = leaf
+        else:
+            out[prefix[:-1]] = leaf
     return out
 
 
 def _unflatten(flat: dict) -> dict:
+    import ml_dtypes  # jax hard-depends on it; the extension-dtype registry
     root: dict = {}
     for key, v in flat.items():
+        key, _, dtype_name = key.partition("@")
+        if dtype_name:
+            v = np.asarray(v).view(np.dtype(getattr(ml_dtypes, dtype_name)))
         parts = key.split("|")
         node = root
         for p in parts[:-1]:

@@ -233,13 +233,16 @@ def sym_pack(f: jax.Array) -> jax.Array:
 
 
 def sym_unpack(p: jax.Array, b: int) -> jax.Array:
-    """Inverse of :func:`sym_pack`."""
-    i, j = np.tril_indices(b)
-    shape = p.shape[:-1] + (b, b)
-    f = jnp.zeros(shape, p.dtype).at[..., i, j].set(p)
-    ft = jnp.swapaxes(f, -1, -2)
-    diag = f * jnp.eye(b, dtype=p.dtype)
-    return f + ft - diag
+    """Inverse of :func:`sym_pack`. A static GATHER, not a scatter: entry
+    (r, c) reads packed position tri(max(r,c)) + min(r,c) — cheaper to
+    lower, and exact for any dtype (incl. fp8 payloads) since no arithmetic
+    touches the values."""
+    r = np.arange(b)
+    hi = np.maximum(r[:, None], r[None, :])
+    lo = np.minimum(r[:, None], r[None, :])
+    idx = (hi * (hi + 1)) // 2 + lo                      # (b, b) int
+    f = jnp.take(p, jnp.asarray(idx.reshape(-1)), axis=-1)
+    return f.reshape(p.shape[:-1] + (b, b))
 
 
 # ---------------------------------------------------------------------------

@@ -39,7 +39,11 @@ class NGDConfig:
     alpha: float = 0.1               # Frobenius similarity threshold
     estimator: str = "emp"           # "emp" | "1mc"
     inverse_method: str = "eigh"     # "eigh" | "cholesky"
-    factor_dtype: Any = jnp.float32  # storage dtype for X_-1/X_-2 history
+    factor_dtype: Any = jnp.float32  # storage dtype for X_-1/X_-2 history:
+                                     # a jnp dtype (dense), or "fp8_e4m3" /
+                                     # "fp8_e5m2" (sym-packed payload +
+                                     # per-block scales; repro.quant)
+    fp8_scale_mode: str = "fp32"     # "fp32" | "pow2" per-block scales
     weight_rescale: bool = False     # Eq. 24 (on for the conv/paper configs)
     rescale_eps: float = 1e-9
     history: int = 2                 # 2 = full Algorithm 2; 1 = cheap variant
@@ -80,6 +84,35 @@ class SPNGD:
         self.counts_fn = counts_fn
         self.cfg = cfg
         self.sharding_hook = sharding_hook or (lambda fam, key, x: x)
+        from repro.quant import parse_factor_dtype
+        self._fp8 = parse_factor_dtype(cfg.factor_dtype)  # fmt key or None
+
+    def _sym_stat(self, fam: str, key: str) -> bool:
+        """Whether a stat is a symmetric blocked factor (sym-packable)."""
+        if key in ("a", "g"):
+            info = self.infos[fam]
+            kind = info.spec.a_kind if key == "a" else info.spec.g_kind
+            return kind == "full"
+        return key == "uwf"                  # full BN Fisher is symmetric
+
+    # ---- fp8 history codec (dequantize-on-read; repro.quant) ----
+
+    def _encode_hist(self, fam: str, key: str, x: jax.Array):
+        if self._fp8 is None:
+            return x.astype(self.cfg.factor_dtype)
+        from repro import quant
+        return quant.encode_stat(x, self._fp8,
+                                 symmetric=self._sym_stat(fam, key),
+                                 scale_mode=self.cfg.fp8_scale_mode,
+                                 backend=self.cfg.backend)
+
+    def _decode_hist(self, fam: str, key: str, stored, shape) -> jax.Array:
+        if self._fp8 is None:
+            return stored.astype(jnp.float32)
+        from repro import quant
+        return quant.decode_stat(stored, shape,
+                                 symmetric=self._sym_stat(fam, key),
+                                 backend=self.cfg.backend)
 
     # ---- statistic naming for the interval controller ----
 
@@ -91,14 +124,26 @@ class SPNGD:
                 names.append(f"{fam}.{key}")
         return sorted(names)
 
-    def stat_bytes(self, dtype_bytes: int = 4) -> dict[str, int]:
-        """Symmetric-packed communication payload per statistic (§5.2)."""
-        from repro.core.stale import sym_packed_bytes
+    def stat_bytes(self, dtype_bytes: Optional[int] = None) -> dict[str, int]:
+        """Symmetric-packed communication payload per statistic (§5.2).
+
+        By default the payload dtype follows ``cfg.factor_dtype`` — fp32 /
+        bf16 dense elements, or fp8 payload + per-block f32 scales — so the
+        IntervalController's byte ledger reports what the Stage-3
+        reduce-scatter would actually move. Pass ``dtype_bytes`` to force a
+        fixed element size (e.g. 4 for an fp32-communication baseline)."""
+        from repro.core.stale import stat_payload_bytes, sym_packed_bytes
         template = jax.eval_shape(self.fstats_fn)
         out = {}
         for fam, stats in template.items():
             for key, leaf in stats.items():
-                out[f"{fam}.{key}"] = sym_packed_bytes(leaf.shape, dtype_bytes)
+                if dtype_bytes is not None:
+                    out[f"{fam}.{key}"] = sym_packed_bytes(leaf.shape,
+                                                           dtype_bytes)
+                else:
+                    out[f"{fam}.{key}"] = stat_payload_bytes(
+                        leaf.shape, self.cfg.factor_dtype,
+                        symmetric=self._sym_stat(fam, key))
         return out
 
     # ---- state ----
@@ -110,7 +155,8 @@ class SPNGD:
             info = self.infos[fam]
             entry = {"prev": {}, "prev2": {}, "precond": {}}
             for key, leaf in stats.items():
-                z = jnp.zeros(leaf.shape, self.cfg.factor_dtype)
+                z = self._encode_hist(fam, key,
+                                      jnp.zeros(leaf.shape, jnp.float32))
                 entry["prev"][key] = z
                 if self.cfg.history >= 2:
                     entry["prev2"][key] = z
@@ -143,11 +189,15 @@ class SPNGD:
             norm = (v / n_a) if key == "a" else (v * n_g)
             norm = self.sharding_hook(fam, key, norm)
             flag = flags[f"{fam}.{key}"]
-            prev = curv["prev"][key].astype(jnp.float32)
+            # dequantize-on-read: fp8 history decodes to f32 here and only
+            # here; Algorithm 2's similarity and the inverse recompute both
+            # consume the decoded view
+            prev = self._decode_hist(fam, key, curv["prev"][key], norm.shape)
             # similarity of the *fresh* statistic vs history (Algorithm 2 input)
             d1 = jnp.where(flag, kfac.frob_distance(norm, prev), -1.0)
             if cfg.history >= 2:
-                prev2 = curv["prev2"][key].astype(jnp.float32)
+                prev2 = self._decode_hist(fam, key, curv["prev2"][key],
+                                          norm.shape)
                 d2 = jnp.where(flag, kfac.frob_distance(norm, prev2), -1.0)
             else:
                 d2 = d1
@@ -155,9 +205,22 @@ class SPNGD:
             # history shift happens only when refreshed
             x = jnp.where(flag, norm, prev)
             normalized[key] = x
-            new_prev[key] = x.astype(cfg.factor_dtype)
-            if cfg.history >= 2:
-                new_prev2[key] = jnp.where(flag, prev, prev2).astype(cfg.factor_dtype)
+            if self._fp8 is None:
+                new_prev[key] = x.astype(cfg.factor_dtype)
+                if cfg.history >= 2:
+                    new_prev2[key] = jnp.where(flag, prev,
+                                               prev2).astype(cfg.factor_dtype)
+            else:
+                # select at the ENCODED level: payload and scale shift
+                # together, so an un-refreshed stat keeps its stored bits
+                # (no re-quantization drift across skipped steps)
+                enc = self._encode_hist(fam, key, norm)
+                sel = lambda a, b: jax.tree.map(
+                    functools.partial(jnp.where, flag), a, b)
+                new_prev[key] = sel(enc, curv["prev"][key])
+                if cfg.history >= 2:
+                    new_prev2[key] = sel(curv["prev"][key],
+                                         curv["prev2"][key])
 
         any_flag = functools.reduce(
             jnp.logical_or, [flags[f"{fam}.{k}"] for k in raw], jnp.asarray(False))

@@ -94,6 +94,30 @@ class IntervalController:
             st.refresh_count += 1
             self.total_bytes += st.bytes_per_refresh
 
+    # ---- checkpoint continuity (Algorithm 1's intervals assume it) ----
+
+    def state_dict(self) -> dict:
+        """JSON-serializable controller state for checkpointing."""
+        return {
+            "alpha": self.alpha,
+            "max_interval": self.max_interval,
+            "steps": self.steps,
+            "total_bytes": self.total_bytes,
+            "dense_bytes": self.dense_bytes,
+            "stats": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: dict) -> "IntervalController":
+        ctrl = cls(list(state["stats"]), alpha=state["alpha"],
+                   max_interval=state["max_interval"])
+        ctrl.steps = state["steps"]
+        ctrl.total_bytes = state["total_bytes"]
+        ctrl.dense_bytes = state["dense_bytes"]
+        for n, s in state["stats"].items():
+            ctrl.stats[n] = StatState(**s)
+        return ctrl
+
     # ---- reporting (paper Table 2 "reduction", Fig. 6) ----
 
     def reduction_rate(self) -> float:
@@ -114,7 +138,9 @@ class IntervalController:
 
 def sym_packed_bytes(shape: tuple, dtype_bytes: int = 4) -> int:
     """Bytes for one symmetric-packed factor array (paper §5.2): the last two
-    axes (b, b) cost b(b+1)/2 each; leading axes multiply."""
+    axes (b, b) cost b(b+1)/2 each; leading axes multiply. Fixed element
+    size; fp8 payload + per-block scale accounting lives in
+    :func:`stat_payload_bytes` (via ``quant.encoded_nbytes``)."""
     if len(shape) >= 2 and shape[-1] == shape[-2]:
         b = shape[-1]
         lead = 1
@@ -125,3 +151,26 @@ def sym_packed_bytes(shape: tuple, dtype_bytes: int = 4) -> int:
     for s in shape:
         n *= s
     return n * dtype_bytes
+
+
+def stat_payload_bytes(shape: tuple, factor_dtype,
+                       symmetric: Optional[bool] = None) -> int:
+    """Sym-packed payload bytes for one statistic under the actual storage
+    dtype: dense fp32/bf16 elements, or fp8 payload + per-block f32 scales
+    (``factor_dtype`` in ``{"fp8_e4m3", "fp8_e5m2"}``; :mod:`repro.quant`).
+    ``symmetric=False`` forces the non-packed (row-quantized) accounting for
+    square-shaped stats that are not symmetric factors."""
+    from repro import quant
+    fmt = quant.parse_factor_dtype(factor_dtype)
+    if symmetric is None:
+        symmetric = len(shape) >= 2 and shape[-1] == shape[-2]
+    if fmt is not None:
+        return quant.encoded_nbytes(shape, symmetric=symmetric)
+    import numpy as np
+    dtype_bytes = int(np.dtype(factor_dtype).itemsize)
+    if not symmetric:
+        n = 1
+        for s in shape:
+            n *= s
+        return n * dtype_bytes
+    return sym_packed_bytes(shape, dtype_bytes)

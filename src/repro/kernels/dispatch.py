@@ -200,6 +200,58 @@ def damped_inverse(f: jax.Array, damping, *, method: str = "eigh",
 
 
 # ---------------------------------------------------------------------------
+# fp8_pack / fp8_unpack: symmetric blocked factor <-> sym-packed fp8 payload
+#   f (..., b, b) -> (payload fp8 (..., t=b(b+1)/2), scale f32 (...,))
+# One scale per block: the quantization tile IS the §5.2 communication tile,
+# so the packed payload doubles as history storage and reduce-scatter message.
+# ---------------------------------------------------------------------------
+
+def _fp8_pack_ref(f, fmt: str, scale_mode: str):
+    from repro.core import kfac
+    from repro.quant import quant
+    return quant.quantize_rows(kfac.sym_pack(f.astype(jnp.float32)),
+                               fmt, scale_mode)
+
+
+def _fp8_pack_pallas(f, fmt: str, scale_mode: str):
+    # the tril gather is pure byte movement and stays on the XLA side (same
+    # split as delta in ops.swa_attention_bwd); the kernel owns the numeric
+    # pass (amax reduce + scale + clip + cast, one VMEM-resident sweep)
+    from repro.core import kfac
+    from repro.kernels import ops
+    return ops.fp8_quant_rows(kfac.sym_pack(f.astype(jnp.float32)),
+                              fmt=fmt, scale_mode=scale_mode)
+
+
+def fp8_pack(f: jax.Array, *, fmt: str = "e4m3", scale_mode: str = "fp32",
+             backend: str | None = None):
+    """Quantize + sym-pack a symmetric blocked factor; §4.3 history and
+    §5.2 payload compression on top of triangular packing."""
+    which = resolve(backend, f.shape[-1])
+    return lookup("fp8_pack", which)(f, fmt, scale_mode)
+
+
+def _fp8_unpack_ref(payload, scale, b: int):
+    from repro.core import kfac
+    from repro.quant import quant
+    return kfac.sym_unpack(quant.dequantize_rows(payload, scale), b)
+
+
+def _fp8_unpack_pallas(payload, scale, b: int):
+    from repro.core import kfac
+    from repro.kernels import ops
+    return kfac.sym_unpack(ops.fp8_dequant_rows(payload, scale), b)
+
+
+def fp8_unpack(payload: jax.Array, scale: jax.Array, b: int, *,
+               backend: str | None = None) -> jax.Array:
+    """Dequantize-on-read: packed fp8 payload -> dense symmetric f32
+    (..., b, b) blocks."""
+    which = resolve(backend, b)
+    return lookup("fp8_unpack", which)(payload, scale, b)
+
+
+# ---------------------------------------------------------------------------
 # swa_attention: causal sliding-window attention, (BH, S, hd) layout
 # ---------------------------------------------------------------------------
 
@@ -290,6 +342,10 @@ register("block_precond_left", "pallas", _precond_left_pallas)
 register("block_precond_right", "ref", _precond_right_ref)
 register("block_precond_right", "pallas", _precond_right_pallas)
 register("damped_inverse", "ref", _damped_inverse_ref)
+register("fp8_pack", "ref", _fp8_pack_ref)
+register("fp8_pack", "pallas", _fp8_pack_pallas)
+register("fp8_unpack", "ref", _fp8_unpack_ref)
+register("fp8_unpack", "pallas", _fp8_unpack_pallas)
 register("swa_attention", "ref", _swa_ref)
 register("swa_attention", "pallas", _swa_pallas)
 register("swa_attention_fwd_res", "ref", _swa_fwd_res_ref)

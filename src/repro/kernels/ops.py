@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import kfac_factor as _factor
 from repro.kernels import kfac_precond as _precond
+from repro.kernels import quant_pack as _quant
 from repro.kernels import swa_attention as _swa
 
 
@@ -91,6 +92,62 @@ def _pad_seq(s: int, bq: int, bk: int) -> int:
     """Padded sequence length: a multiple of BOTH tile sizes (their lcm)."""
     tile = math.lcm(bq, bk)
     return -(-s // tile) * tile
+
+
+# VMEM budget for one quantization tile, in ELEMENTS of the packed row
+# axis: a tile touches ~5 bytes/element (f32 in + fp8 out), so 2^21
+# elements ≈ 10.5 MB — one whole row of the largest factor block the
+# framework produces (max_dim=2048 -> t = b(b+1)/2 ≈ 2.1M) still fits the
+# ~16 MB/core VMEM with bg=1, and smaller rows batch up to bg per tile.
+_QUANT_TILE_ELEMS = 1 << 21
+
+
+def _rows_per_tile(bg: int, g: int, t: int) -> int:
+    return max(1, min(bg, g, _QUANT_TILE_ELEMS // max(t, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "scale_mode", "bg",
+                                             "interpret"))
+def fp8_quant_rows(x: jax.Array, *, fmt: str = "e4m3",
+                   scale_mode: str = "fp32", bg: int = 8,
+                   interpret: bool | None = None):
+    """Per-row fp8 quantization: (..., t) -> (payload fp8 (..., t),
+    scale f32 (...,)). Rows are whole quantization tiles (one scale each);
+    for sym-packed factors a row is one block's packed lower triangle."""
+    from repro.quant import quant as _q
+    interpret = _default_interpret() if interpret is None else interpret
+    lead, t = x.shape[:-1], x.shape[-1]
+    flat = x.reshape((-1, t))
+    g = flat.shape[0]
+    bg_ = _rows_per_tile(bg, g, t)
+    gp = -(-g // bg_) * bg_
+    tp = -(-t // 128) * 128          # lane alignment; zeros are amax-neutral
+    if gp != g or tp != t:
+        flat = jnp.pad(flat, ((0, gp - g), (0, tp - t)))
+    payload, scale = _quant.quant_rows(
+        flat, _q.FORMATS[fmt], fmt_max=_q.FMT_MAX[fmt],
+        pow2=(scale_mode == "pow2"), bg=bg_, interpret=interpret)
+    return (payload[:g, :t].reshape(lead + (t,)),
+            scale[:g, 0].reshape(lead))
+
+
+@functools.partial(jax.jit, static_argnames=("bg", "interpret"))
+def fp8_dequant_rows(payload: jax.Array, scale: jax.Array, *, bg: int = 8,
+                     interpret: bool | None = None) -> jax.Array:
+    """Inverse of :func:`fp8_quant_rows`: fp8 payload + per-row scale -> f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead, t = payload.shape[:-1], payload.shape[-1]
+    flat = payload.reshape((-1, t))
+    g = flat.shape[0]
+    bg_ = _rows_per_tile(bg, g, t)
+    gp = -(-g // bg_) * bg_
+    tp = -(-t // 128) * 128
+    if gp != g or tp != t:
+        flat = jnp.pad(flat, ((0, gp - g), (0, tp - t)))
+    s = jnp.pad(scale.reshape((-1, 1)).astype(jnp.float32),
+                ((0, gp - g), (0, 0)))
+    out = _quant.dequant_rows(flat, s, bg=bg_, interpret=interpret)
+    return out[:g, :t].reshape(lead + (t,))
 
 
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",

@@ -1,0 +1,91 @@
+"""Pallas TPU kernels: per-row fp8 quantize / dequantize for packed factors.
+
+These are the kernel half of the fp8 history / comm-payload subsystem
+(:mod:`repro.quant`). The layout contract mirrors the SYRK epilogue: a
+symmetric blocked factor ``(lead..., nb, b, b)`` sym-packs (XLA-side static
+tril gather — pure byte movement, same division of labour as the ``delta``
+rowsum in ``ops.swa_attention_bwd``) into rows of ``t = b(b+1)/2`` values,
+and each kernel instance owns a tile of ``bg`` whole rows kept resident in
+VMEM: amax reduction, scale, clip and fp8 cast happen in ONE pass over the
+data — the fusion is quantize-with-its-own-scale, which XLA would otherwise
+split into a reduce pass plus a rescale pass through HBM.
+
+Rows are padded to the 128-lane boundary with zeros; zero padding is
+amax-neutral (abs) and the wrappers in :mod:`repro.kernels.ops` slice it
+off. A tile of ``bg`` rows must fit VMEM at ~5 bytes/element (f32 in +
+fp8 out): the wrappers shrink ``bg`` so ``bg * t`` stays within a ~10 MB
+tile budget (``ops._QUANT_TILE_ELEMS``), which reaches bg=1 exactly at
+the largest row the framework produces (``max_dim`` 2048 -> t ≈ 2.1M);
+anything beyond that would need a two-sweep (amax then quantize) variant.
+
+Grid: (rows/bg,); one program per row tile, no revisit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_rows_kernel(x_ref, payload_ref, scale_ref, *, fmt_max: float,
+                       pow2: bool):
+    x = x_ref[...].astype(jnp.float32)                   # (bg, t)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)   # (bg, 1)
+    # explicit reciprocal-multiply: bit-identical to the ref scale (see
+    # quant.FMT_INV_MAX)
+    s = amax * (1.0 / fmt_max)
+    if pow2:
+        s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(s, 2.0 ** -126))))
+    s = jnp.where(amax > 0, s, 1.0)
+    scale_ref[...] = s
+    q = jnp.clip(x / s, -fmt_max, fmt_max)   # e4m3fn overflows to NaN: clip
+    payload_ref[...] = q.astype(payload_ref.dtype)
+
+
+def quant_rows(x: jax.Array, fp8_dtype, *, fmt_max: float,
+               pow2: bool = False, bg: int = 8,
+               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (g, t) f32/bf16 -> (payload (g, t) fp8, scale (g, 1) f32)."""
+    g, t = x.shape
+    bg_ = min(bg, g)
+    grid = (pl.cdiv(g, bg_),)
+    return pl.pallas_call(
+        functools.partial(_quant_rows_kernel, fmt_max=fmt_max, pow2=pow2),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bg_, t), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bg_, t), lambda i: (i, 0)),
+            pl.BlockSpec((bg_, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, t), fp8_dtype),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_rows_kernel(payload_ref, scale_ref, out_ref):
+    out_ref[...] = payload_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def dequant_rows(payload: jax.Array, scale: jax.Array, *, bg: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """payload: (g, t) fp8, scale: (g, 1) f32 -> (g, t) f32."""
+    g, t = payload.shape
+    bg_ = min(bg, g)
+    grid = (pl.cdiv(g, bg_),)
+    return pl.pallas_call(
+        _dequant_rows_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bg_, t), lambda i: (i, 0)),
+            pl.BlockSpec((bg_, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bg_, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, t), jnp.float32),
+        interpret=interpret,
+    )(payload, scale)

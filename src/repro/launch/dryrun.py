@@ -87,14 +87,17 @@ def active_param_fraction(cfg: ArchConfig) -> float:
 def build_case(arch: str, shape_name: str, mesh, *,
                schedule: str = "auto", tp_align: bool = False,
                rwkv_chunk: int = 0, fast: bool = False,
-               backend: str = "auto"):
+               backend: str = "auto", factor_dtype: str = "f32"):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
     explicit 5-stage Algorithm 3). tp_align: factor blocks aligned to TP
     shard boundaries (beyond-paper, DESIGN.md §4). backend: kernel backend
     for the hot paths (repro.kernels.dispatch) — threaded through both the
-    jit and shard_map schedules via the arch config and NGDConfig."""
+    jit and shard_map schedules via the arch config and NGDConfig.
+    factor_dtype: factor-history storage ("f32" | "bf16" | "fp8_e4m3" |
+    "fp8_e5m2"; fp8 stores sym-packed payloads + per-block scales, so the
+    dry-run's memory_analysis sees the compressed optimizer state)."""
     cfg = effective_config(arch, shape_name)
     if backend != "auto":
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -146,8 +149,11 @@ def build_case(arch: str, shape_name: str, mesh, *,
         model.moe_hook = moe_hook
 
     if shape.kind == "train":
+        from repro.quant import FACTOR_DTYPES
         opt = SPNGD(model.loss, model.site_infos(), model.fstats,
-                    model.site_counts, NGDConfig(backend=cfg.backend),
+                    model.site_counts,
+                    NGDConfig(backend=cfg.backend,
+                              factor_dtype=FACTOR_DTYPES[factor_dtype]),
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
@@ -213,19 +219,22 @@ def build_case(arch: str, shape_name: str, mesh, *,
 def run_case(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: Optional[str] = None, schedule: str = "auto",
              tp_align: bool = False, rwkv_chunk: int = 0,
-             fast: bool = False, backend: str = "auto") -> dict:
+             fast: bool = False, backend: str = "auto",
+             factor_dtype: str = "f32") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
     t0 = time.time()
     rec = {"arch": arch, "shape": shape_name, "schedule": schedule,
            "tp_align": tp_align, "backend": backend,
+           "factor_dtype": factor_dtype,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
         with compat.set_mesh(mesh):
             step, args, n_params, label = build_case(
                 arch, shape_name, mesh, schedule=schedule, tp_align=tp_align,
-                rwkv_chunk=rwkv_chunk, fast=fast, backend=backend)
+                rwkv_chunk=rwkv_chunk, fast=fast, backend=backend,
+                factor_dtype=factor_dtype)
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
@@ -313,6 +322,12 @@ def main():
                     choices=["ref", "pallas", "auto"],
                     help="kernel backend (repro.kernels.dispatch); pallas "
                          "includes the fused attention backward")
+    from repro.quant import FACTOR_DTYPES
+    ap.add_argument("--factor-dtype", default="f32",
+                    choices=sorted(FACTOR_DTYPES),
+                    help="factor-history storage dtype (repro.quant); fp8 "
+                         "shrinks the optimizer-state arrays the dry-run's "
+                         "memory_analysis accounts")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -329,6 +344,8 @@ def main():
         variant += f"__{args.schedule}"
     if args.backend != "auto":
         variant += f"__{args.backend}"
+    if args.factor_dtype != "f32":
+        variant += f"__{args.factor_dtype}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -349,7 +366,8 @@ def main():
                 rec = run_case(arch, shape, mp, save_hlo=hlo_path,
                                schedule=args.schedule, tp_align=args.tp_align,
                                rwkv_chunk=args.rwkv_chunk, fast=args.fast,
-                               backend=args.backend)
+                               backend=args.backend,
+                               factor_dtype=args.factor_dtype)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -304,6 +304,13 @@ def main():
                          "(repro.kernels.dispatch); pallas trains attention "
                          "through the fused dq/dk/dv backward kernels "
                          "(residual-saving forward, no recompute pass)")
+    from repro.quant import FACTOR_DTYPES
+    ap.add_argument("--factor-dtype", default="f32",
+                    choices=sorted(FACTOR_DTYPES),
+                    help="storage dtype for the X_-1/X_-2 factor history "
+                         "and the statistics payload ledger; fp8 variants "
+                         "store sym-packed payloads + per-block scales "
+                         "(repro.quant) and dequantize on read")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
@@ -322,8 +329,9 @@ def main():
           f"{n / 1e6:.1f}M params")
 
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
-                model.site_counts, NGDConfig(damping=args.damping,
-                                             backend=args.backend))
+                model.site_counts,
+                NGDConfig(damping=args.damping, backend=args.backend,
+                          factor_dtype=FACTOR_DTYPES[args.factor_dtype]))
     state = opt.init(params)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
                               bytes_per_stat=opt.stat_bytes())

@@ -1,0 +1,170 @@
+"""fp8 factor-history / comm-payload quantization (per-block scales).
+
+The paper makes curvature cheap in two places: §4.3 keeps stale factor
+history (X_-1, X_-2) resident in optimizer state, and §5.2 symmetry-packs
+the Stage-3 reduce-scatter payload. This module quantizes both to fp8 with
+per-block scales, halving stale memory and communication bytes *on top of*
+the triangular packing.
+
+Format contract
+---------------
+* A **stat** is one factor-family array: a full Kronecker factor in the
+  blocked ``(lead..., nb, b, b)`` layout (symmetric per block), or a
+  diagonal / unit-wise statistic whose trailing axes are not square.
+* Symmetric stats are stored **sym-packed**: the lower triangle of each
+  ``(b, b)`` block flattens to ``t = b(b+1)/2`` values (``kfac.sym_pack``
+  order), then quantizes with ONE scale per block — the scale granularity
+  matches the §5.2 communication granularity, so the same payload serves as
+  both the resident history and the reduce-scatter message.
+* Non-symmetric stats quantize over their last axis with one scale per row.
+* ``scale = amax / FMT_MAX`` as fp32 (``scale_mode="fp32"``), or rounded up
+  to a power of two (``scale_mode="pow2"``: the scale application becomes an
+  exact exponent shift; payload loses ≤ 1 bit of headroom). All-zero blocks
+  get scale 1 so decode is exact and no division blows up.
+* Values are clipped to ±FMT_MAX before the cast: e4m3 (``float8_e4m3fn``)
+  has no inf and overflows to NaN, so the clip is load-bearing.
+* **e4m3 vs e5m2**: factor second moments are non-negative with modest
+  per-block dynamic range once scaled — precision (3 mantissa bits) beats
+  range, so e4m3 is the default. e5m2 exists for gradient-scale statistics
+  whose per-block range can exceed e4m3's 2^±8 span.
+* **Dequantize-on-read**: decode always returns f32; nothing downstream
+  (Frobenius distances, damped inverses) ever computes in fp8.
+
+The encoded representation is a plain dict ``{"payload", "scale"}`` so it
+checkpoints, shards and ``tree.map``s like every other piece of optimizer
+state. The hot encode/decode path for symmetric stats routes through the
+kernel dispatch layer (``fp8_pack`` / ``fp8_unpack`` — ref jnp here, Pallas
+in :mod:`repro.kernels.quant_pack`), degrading op-by-op on CPU like every
+other kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FORMATS: dict[str, Any] = {
+    "e4m3": jnp.float8_e4m3fn,
+    "e5m2": jnp.float8_e5m2,
+}
+
+# largest finite magnitude per format (e4m3fn has no inf: 448 then NaN)
+FMT_MAX: dict[str, float] = {"e4m3": 448.0, "e5m2": 57344.0}
+
+# scale = amax * (1/FMT_MAX) as an explicit constant multiply: XLA rewrites
+# division-by-constant to reciprocal-multiply under jit but not eagerly, so
+# an explicit multiply keeps ref and Pallas scales bit-identical
+FMT_INV_MAX: dict[str, float] = {k: 1.0 / v for k, v in FMT_MAX.items()}
+
+# bytes per payload element / per-block scale (f32)
+PAYLOAD_BYTES = 1
+SCALE_BYTES = 4
+
+# CLI spelling -> NGDConfig.factor_dtype value (the single source for the
+# --factor-dtype flags on repro.launch.train / repro.launch.dryrun)
+FACTOR_DTYPES: dict[str, Any] = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "fp8_e4m3": "fp8_e4m3",
+    "fp8_e5m2": "fp8_e5m2",
+}
+
+
+def parse_factor_dtype(factor_dtype: Any) -> Optional[str]:
+    """``NGDConfig.factor_dtype`` -> fp8 format key, or None for plain
+    dtypes (f32 / bf16 history stays a dense ``astype``)."""
+    if isinstance(factor_dtype, str):
+        if factor_dtype in ("fp8_e4m3", "fp8_e5m2"):
+            return factor_dtype[4:]
+        raise ValueError(f"unknown factor_dtype {factor_dtype!r}; expected "
+                         f"'fp8_e4m3' | 'fp8_e5m2' or a jnp dtype")
+    return None
+
+
+def compute_scale(amax: jax.Array, fmt: str,
+                  scale_mode: str = "fp32") -> jax.Array:
+    """Per-tile scale mapping |x| <= amax onto the format's finite range."""
+    if fmt not in FMT_MAX:
+        raise ValueError(f"unknown fp8 format {fmt!r}; expected "
+                         f"{sorted(FMT_MAX)}")
+    s = amax.astype(jnp.float32) * FMT_INV_MAX[fmt]
+    if scale_mode == "pow2":
+        s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(s, 2.0 ** -126))))
+    elif scale_mode != "fp32":
+        raise ValueError(f"unknown scale_mode {scale_mode!r}; "
+                         f"expected 'fp32' | 'pow2'")
+    return jnp.where(amax > 0, s, 1.0).astype(jnp.float32)
+
+
+def quantize_rows(x: jax.Array, fmt: str = "e4m3",
+                  scale_mode: str = "fp32") -> tuple[jax.Array, jax.Array]:
+    """(..., t) -> (payload fp8 (..., t), scale f32 (...,)); one scale per
+    trailing row. This is the reference implementation of the quantize half
+    of the ``fp8_pack`` dispatch op."""
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = compute_scale(amax, fmt, scale_mode)
+    m = FMT_MAX[fmt]
+    q = jnp.clip(x / scale[..., None], -m, m)
+    return q.astype(FORMATS[fmt]), scale
+
+
+def dequantize_rows(payload: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_rows` up to fp8 rounding; returns f32."""
+    return payload.astype(jnp.float32) * scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Stat-level encode/decode (the optimizer-facing API)
+# ---------------------------------------------------------------------------
+
+def encode_stat(x: jax.Array, fmt: str, *, symmetric: Optional[bool] = None,
+                scale_mode: str = "fp32",
+                backend: Optional[str] = None) -> dict:
+    """Encode one statistic to ``{"payload": fp8, "scale": f32}``.
+
+    ``symmetric=True`` sym-packs the trailing (b, b) axes first (blocked
+    factor layout); default sniffs square trailing axes. Callers that know
+    the stat kind (the optimizer does) should pass it explicitly — a diag
+    stat whose leading axis happens to equal its last would mis-sniff.
+    """
+    if symmetric is None:
+        symmetric = x.ndim >= 2 and x.shape[-1] == x.shape[-2]
+    if symmetric:
+        from repro.kernels import dispatch
+        payload, scale = dispatch.fp8_pack(x, fmt=fmt, scale_mode=scale_mode,
+                                           backend=backend)
+    else:
+        payload, scale = quantize_rows(x, fmt, scale_mode)
+    return {"payload": payload, "scale": scale}
+
+
+def decode_stat(entry: dict, shape: tuple, *,
+                symmetric: Optional[bool] = None,
+                backend: Optional[str] = None) -> jax.Array:
+    """Dequantize-on-read: encoded dict -> dense f32 of ``shape``."""
+    if symmetric is None:
+        symmetric = len(shape) >= 2 and shape[-1] == shape[-2]
+    if symmetric:
+        from repro.kernels import dispatch
+        return dispatch.fp8_unpack(entry["payload"], entry["scale"],
+                                   shape[-1], backend=backend)
+    return dequantize_rows(entry["payload"], entry["scale"])
+
+
+def encoded_nbytes(shape: tuple, symmetric: Optional[bool] = None) -> int:
+    """Resident bytes of the encoded form of a stat of ``shape``
+    (fp8 payload + f32 per-block scales; sym-packed when symmetric)."""
+    if symmetric is None:
+        symmetric = len(shape) >= 2 and shape[-1] == shape[-2]
+    if symmetric:
+        b = shape[-1]
+        blocks = int(np.prod(shape[:-2], dtype=np.int64))
+        return blocks * (b * (b + 1) // 2) * PAYLOAD_BYTES \
+            + blocks * SCALE_BYTES
+    n = int(np.prod(shape, dtype=np.int64))
+    rows = int(np.prod(shape[:-1], dtype=np.int64)) if len(shape) > 1 else 1
+    return n * PAYLOAD_BYTES + rows * SCALE_BYTES

@@ -1,0 +1,87 @@
+"""Checkpoint round-trip under non-f32 factor history (ISSUE-3 satellite):
+save/restore a 5-step SP-NGD run mid-stream with bf16 and fp8 history and
+assert BIT-IDENTICAL continuation vs the uninterrupted run — params,
+velocity, curvature history (incl. fp8 payloads + scales) and the host-side
+IntervalController state all have to survive the .npz round trip exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import save_checkpoint, restore_checkpoint
+from repro.core.ngd import NGDConfig, SPNGD
+from repro.core.stale import IntervalController
+
+from test_ngd_optimizer import (loss_fn, fstats_fn, counts_fn, INFOS, _data,
+                                D_IN, D_H, D_OUT)
+
+STEPS, BREAK_AT = 5, 3
+
+
+def _make(cfg):
+    rng = np.random.RandomState(12)
+    params = {"w1": jnp.asarray(rng.randn(D_IN, D_H) * 0.4, jnp.float32),
+              "w2": jnp.asarray(rng.randn(D_H, D_OUT) * 0.4, jnp.float32)}
+    opt = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn, cfg)
+    ctrl = IntervalController(opt.stat_names(), alpha=0.1,
+                              bytes_per_stat=opt.stat_bytes())
+    return params, opt, opt.init(params), ctrl
+
+
+def _advance(opt, ctrl, params, state, t):
+    batch = _data(seed=t)
+    flags = ctrl.flags(t)
+    if any(flags.values()):
+        jf = {k: jnp.asarray(v) for k, v in flags.items()}
+        params, state, m = jax.jit(opt.step)(params, state, batch, jf,
+                                             1e-3, 0.1, 0.9)
+        ctrl.update(t, flags, {k: (float(v[0]), float(v[1]))
+                               for k, v in m["sims"].items()})
+    else:
+        params, state, m = jax.jit(opt.step_fast)(params, state, batch,
+                                                  1e-3, 0.1, 0.9)
+        ctrl.update(t, flags, {})
+    return params, state
+
+
+def _assert_trees_bitwise_equal(a, b):
+    def eq(x, y):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        np.testing.assert_array_equal(
+            x.view(np.dtype(f"u{x.dtype.itemsize}")),
+            y.view(np.dtype(f"u{y.dtype.itemsize}")))
+    jax.tree.map(eq, a, b)
+
+
+@pytest.mark.parametrize("factor_dtype", [jnp.bfloat16, "fp8_e4m3"],
+                         ids=["bf16", "fp8_e4m3"])
+def test_checkpoint_roundtrip_continuation(tmp_path, factor_dtype):
+    cfg = NGDConfig(damping=1e-3, factor_dtype=factor_dtype)
+
+    # uninterrupted run
+    params, opt, state, ctrl = _make(cfg)
+    for t in range(1, STEPS + 1):
+        params, state = _advance(opt, ctrl, params, state, t)
+
+    # interrupted run: save at BREAK_AT, restore into fresh objects, resume
+    p2, opt2, s2, c2 = _make(cfg)
+    for t in range(1, BREAK_AT + 1):
+        p2, s2 = _advance(opt2, c2, p2, s2, t)
+    save_checkpoint(str(tmp_path), BREAK_AT, p2, s2, c2.state_dict())
+
+    r = restore_checkpoint(str(tmp_path))
+    assert r["step"] == BREAK_AT
+    p3, s3 = r["params"], r["opt_state"]
+    _assert_trees_bitwise_equal(p3, p2)        # the round trip itself
+    _assert_trees_bitwise_equal(s3, s2)
+    c3 = IntervalController.from_state_dict(r["controller"])
+    assert c3.state_dict() == c2.state_dict()
+    _, opt3, _, _ = _make(cfg)
+    for t in range(BREAK_AT + 1, STEPS + 1):
+        p3, s3 = _advance(opt3, c3, p3, s3, t)
+
+    # continuation must be bit-identical to the uninterrupted run
+    _assert_trees_bitwise_equal(p3, params)
+    _assert_trees_bitwise_equal(s3, state)
+    assert c3.state_dict() == ctrl.state_dict()

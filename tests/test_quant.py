@@ -1,0 +1,239 @@
+"""fp8 factor-history subsystem (repro.quant + fp8_pack/fp8_unpack kernels).
+
+Covers the ISSUE-3 acceptance criteria:
+  * sym_pack/sym_unpack round-trip identity (property, odd/degenerate b);
+  * fp8 encode/decode bounded error <= 2^-2 * per-block amax (both formats,
+    both scale modes — actual bound is ~amax/28 for e4m3, ~amax/14 for e5m2);
+  * ref-vs-pallas bit parity for the pack/unpack dispatch ops;
+  * with factor_dtype="fp8_e4m3": history bytes <= 0.27x fp32 dense,
+    Algorithm 2 schedule matches the fp32 run, and a 20-step e2e run stays
+    within 2e-2 relative loss of the fp32-history baseline on ref AND pallas.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import kfac
+from repro.core.ngd import NGDConfig, SPNGD
+from repro.core.stale import IntervalController, stat_payload_bytes
+from repro.kernels import dispatch
+from repro import quant
+
+from test_ngd_optimizer import (loss_fn, fstats_fn, counts_fn, INFOS, _data,
+                                D_IN, D_H, D_OUT)
+
+
+def _sym_blocked(rng, nb, b, lead=()):
+    x = rng.randn(*lead, nb, b, b).astype(np.float32)
+    return jnp.asarray(x + np.swapaxes(x, -1, -2))
+
+
+# ---------------------------------------------------------------------------
+# sym_pack / sym_unpack (property: round-trip identity, any block size)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(nb=st.integers(1, 3), b=st.integers(1, 33))
+def test_sym_pack_roundtrip_property(nb, b):
+    rng = np.random.RandomState(nb * 100 + b)
+    f = _sym_blocked(rng, nb, b)
+    p = kfac.sym_pack(f)
+    assert p.shape == (nb, b * (b + 1) // 2)
+    np.testing.assert_array_equal(kfac.sym_unpack(p, b), f)
+
+
+def test_sym_unpack_preserves_dtype():
+    p = jnp.asarray(np.arange(6), jnp.float8_e4m3fn)   # b=3 packed row
+    f = kfac.sym_unpack(p, 3)
+    assert f.dtype == jnp.float8_e4m3fn
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(f).T)
+
+
+# ---------------------------------------------------------------------------
+# fp8 encode/decode: bounded error, both formats/scale modes, degenerates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["e4m3", "e5m2"])
+@pytest.mark.parametrize("scale_mode", ["fp32", "pow2"])
+def test_fp8_roundtrip_bounded_error(fmt, scale_mode):
+    rng = np.random.RandomState(0)
+    f = _sym_blocked(rng, 3, 17, lead=(2,)) * 37.0
+    enc = quant.encode_stat(f, fmt, scale_mode=scale_mode, backend="ref")
+    dec = np.asarray(quant.decode_stat(enc, f.shape, backend="ref"))
+    amax = np.max(np.abs(np.asarray(f)), axis=(-1, -2))
+    err = np.max(np.abs(dec - np.asarray(f)), axis=(-1, -2))
+    assert (err <= 0.25 * amax).all(), (fmt, scale_mode, err / amax)
+    assert np.isfinite(dec).all()
+    # decoded blocks stay exactly symmetric (packed storage mirrors)
+    np.testing.assert_array_equal(dec, np.swapaxes(dec, -1, -2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 21), scale=st.sampled_from([1e-4, 1.0, 3e3]))
+def test_fp8_pack_property(b, scale):
+    rng = np.random.RandomState(b)
+    f = _sym_blocked(rng, 2, b) * scale
+    pay, sc = dispatch.fp8_pack(f, backend="ref")
+    dec = np.asarray(dispatch.fp8_unpack(pay, sc, b, backend="ref"))
+    amax = np.max(np.abs(np.asarray(f)), axis=(-1, -2))
+    err = np.max(np.abs(dec - np.asarray(f)), axis=(-1, -2))
+    assert (err <= 0.25 * np.maximum(amax, 1e-30)).all()
+
+
+def test_fp8_zero_blocks_decode_exactly():
+    z = jnp.zeros((2, 5, 5))
+    enc = quant.encode_stat(z, "e4m3")
+    np.testing.assert_array_equal(np.asarray(enc["scale"]), 1.0)
+    np.testing.assert_array_equal(quant.decode_stat(enc, z.shape),
+                                  np.zeros((2, 5, 5), np.float32))
+
+
+def test_fp8_rows_nonsquare_stats():
+    """Diag/unit-wise stats quantize over the last axis, one scale per row."""
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(4, 3) * 100, jnp.float32)
+    enc = quant.encode_stat(x, "e4m3", symmetric=False)
+    assert enc["payload"].shape == (4, 3) and enc["scale"].shape == (4,)
+    dec = np.asarray(quant.decode_stat(enc, x.shape, symmetric=False))
+    amax = np.max(np.abs(np.asarray(x)), -1, keepdims=True)
+    assert (np.abs(dec - np.asarray(x)) <= 0.25 * amax).all()
+
+
+def test_fp8_e5m2_survives_wide_dynamic_range():
+    """e5m2 trades mantissa for exponent: a value 2^-20 below its block amax
+    still decodes nonzero, where e4m3's narrower span flushes it to zero —
+    the per-statistic format choice documented in the README."""
+    x = jnp.asarray([[1.0, 2.0 ** -20]], jnp.float32)
+    d5 = quant.decode_stat(quant.encode_stat(x, "e5m2", symmetric=False),
+                           x.shape, symmetric=False)
+    d4 = quant.decode_stat(quant.encode_stat(x, "e4m3", symmetric=False),
+                           x.shape, symmetric=False)
+    assert float(d5[0, 1]) > 0.0
+    assert float(d4[0, 1]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ref vs pallas parity (bit-identical payload/scale; interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nb,b,lead", [(1, 8, ()), (3, 33, ()), (2, 16, (2,))])
+def test_fp8_pack_unpack_ref_vs_pallas(nb, b, lead):
+    rng = np.random.RandomState(nb * 10 + b)
+    f = _sym_blocked(rng, nb, b, lead=lead)
+    pay_r, sc_r = jax.jit(
+        lambda f: dispatch.fp8_pack(f, backend="ref"))(f)
+    pay_p, sc_p = dispatch.fp8_pack(f, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(pay_r).view(np.uint8),
+                                  np.asarray(pay_p).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sc_r), np.asarray(sc_p))
+    out_r = jax.jit(
+        lambda p, s: dispatch.fp8_unpack(p, s, b, backend="ref"))(pay_r, sc_r)
+    out_p = dispatch.fp8_unpack(pay_p, sc_p, b, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(out_p))
+
+
+# ---------------------------------------------------------------------------
+# optimizer integration: bytes, schedule, e2e loss (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _run_mlp(cfg, steps=20):
+    rng = np.random.RandomState(7)
+    params = {"w1": jnp.asarray(rng.randn(D_IN, D_H) * 0.4, jnp.float32),
+              "w2": jnp.asarray(rng.randn(D_H, D_OUT) * 0.4, jnp.float32)}
+    opt = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn, cfg)
+    state = opt.init(params)
+    ctrl = IntervalController(opt.stat_names(), alpha=0.1,
+                              bytes_per_stat=opt.stat_bytes())
+    step_j = jax.jit(opt.step)
+    fast_j = jax.jit(opt.step_fast)
+    losses, schedule = [], []
+    for t in range(1, steps + 1):
+        batch = _data(seed=t)
+        flags = ctrl.flags(t)
+        schedule.append(tuple(sorted(k for k, v in flags.items() if v)))
+        if any(flags.values()):
+            jf = {k: jnp.asarray(v) for k, v in flags.items()}
+            params, state, m = step_j(params, state, batch, jf, 1e-3, 0.1, 0.9)
+            ctrl.update(t, flags, {k: (float(v[0]), float(v[1]))
+                                   for k, v in m["sims"].items()})
+        else:
+            params, state, m = fast_j(params, state, batch, 1e-3, 0.1, 0.9)
+            ctrl.update(t, flags, {})
+        losses.append(float(m["loss"]))
+    return losses, schedule, state
+
+
+def _history_nbytes(state):
+    return sum(sum(x.nbytes for x in jax.tree.leaves(c[part]))
+               for c in state["curv"].values() for part in ("prev", "prev2"))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_fp8_history_e2e_matches_f32(backend):
+    l32, s32, st32 = _run_mlp(NGDConfig(damping=1e-3, backend=backend))
+    l8, s8, st8 = _run_mlp(NGDConfig(damping=1e-3, factor_dtype="fp8_e4m3",
+                                     backend=backend))
+    # Algorithm 2 interval schedule must match the fp32 run step for step
+    assert s8 == s32
+    for a, b in zip(l8, l32):
+        assert abs(a - b) <= 2e-2 * abs(b), (a, b)
+    # factor-history bytes <= 0.27x the fp32 dense history
+    assert _history_nbytes(st8) <= 0.27 * _history_nbytes(st32)
+
+
+def test_fp8_mixed_flags_precondition_from_dequantized_history():
+    """When one stat refreshes and its sibling doesn't, the recomputed
+    inverse must consume the DEQUANTIZED history for the stale side — the
+    dequantize-on-read contract, exercised explicitly."""
+    batch = _data(0)
+    rng = np.random.RandomState(3)
+    params = {"w1": jnp.asarray(rng.randn(D_IN, D_H) * 0.4, jnp.float32),
+              "w2": jnp.asarray(rng.randn(D_H, D_OUT) * 0.4, jnp.float32)}
+    opt = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn,
+                NGDConfig(damping=1e-3, factor_dtype="fp8_e4m3"))
+    state = opt.init(params)
+    on = {k: jnp.asarray(True) for k in opt.stat_names()}
+    params, state, _ = jax.jit(opt.step)(params, state, batch, on,
+                                         1e-3, 0.1, 0.9)
+    # refresh only l1.a: l1.g's side of the inverse must come from history
+    mixed = dict(on)
+    mixed["l1.g"] = jnp.asarray(False)
+    batch2 = _data(1)
+    _, state2, _ = jax.jit(opt.step)(params, state, batch2, mixed,
+                                     1e-3, 0.1, 0.9)
+    g_hist = quant.decode_stat(
+        state["curv"]["l1"]["prev"]["g"],
+        jax.eval_shape(fstats_fn)["l1"]["g"].shape)
+    # the stored payload for the unrefreshed stat is bit-identical...
+    np.testing.assert_array_equal(
+        np.asarray(state2["curv"]["l1"]["prev"]["g"]["payload"]).view(np.uint8),
+        np.asarray(state["curv"]["l1"]["prev"]["g"]["payload"]).view(np.uint8))
+    # ...and the recomputed preconditioner changed (fresh a + stale g)
+    assert not np.array_equal(state2["curv"]["l1"]["precond"]["g"],
+                              state["curv"]["l1"]["precond"]["g"])
+    assert np.isfinite(np.asarray(g_hist)).all()
+
+
+def test_stat_payload_bytes_accounting():
+    # full factor (2, 8, 8): fp32 packed 2*36*4; fp8 packed 2*36*1 + 2*4
+    assert stat_payload_bytes((2, 8, 8), jnp.float32) == 2 * 36 * 4
+    assert stat_payload_bytes((2, 8, 8), jnp.bfloat16) == 2 * 36 * 2
+    assert stat_payload_bytes((2, 8, 8), "fp8_e4m3") == 2 * 36 + 2 * 4
+    # non-square: dense elements (+ per-row scale for fp8)
+    assert stat_payload_bytes((3, 5), jnp.float32) == 15 * 4
+    assert stat_payload_bytes((3, 5), "fp8_e4m3") == 15 + 3 * 4
+    # square-but-not-symmetric opt-out
+    assert stat_payload_bytes((4, 4), jnp.float32, symmetric=False) == 16 * 4
+
+
+def test_stat_bytes_follows_factor_dtype():
+    opt32 = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn, NGDConfig())
+    opt8 = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn,
+                 NGDConfig(factor_dtype="fp8_e4m3"))
+    b32, b8 = opt32.stat_bytes(), opt8.stat_bytes()
+    assert set(b32) == set(b8)
+    assert sum(b8.values()) < 0.3 * sum(b32.values())
+    # explicit override keeps the old fixed-size accounting
+    assert opt8.stat_bytes(dtype_bytes=4) == b32
