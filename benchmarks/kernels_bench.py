@@ -121,6 +121,43 @@ def _bench_attn_bwd(quick: bool):
     return out
 
 
+def _bench_damped_inverse(quick: bool):
+    """A/B the Stage-4 inversion: ref eigh (the LAPACK/XLA factorization
+    path — not matmul-shaped, the paper's non-GEMM bottleneck) vs the
+    blocked Newton-Schulz Pallas kernel (matmul-only; interpret mode on
+    CPU). cost-analysis FLOPs are the durable column: the NS figure counts
+    real GEMM work the MXU would run, while eigh's custom-call largely
+    hides from the counter — the wall-time ratio on CPU is the honest
+    comparison, the FLOP column documents that NS is pure countable
+    matmuls. Returns {name: {us, flops, maxerr...}}."""
+    from repro.kernels import dispatch
+    from repro.launch import compat
+
+    nb, b = (2, 64) if quick else (4, 128)
+    rng = np.random.RandomState(0)
+    q = np.linalg.qr(rng.randn(nb, b, b))[0]
+    lam = np.logspace(0, -3, b)                       # damped kappa ~1e3
+    f = jnp.asarray(np.einsum("kab,b,kcb->kac", q, lam, q), jnp.float32)
+    d = jnp.asarray(1e-3)
+
+    fns = {
+        "eigh": jax.jit(lambda f, d: dispatch.damped_inverse(
+            f, d, method="eigh", backend="ref")),
+        "newton_schulz": jax.jit(lambda f, d: dispatch.damped_inverse(
+            f, d, method="newton_schulz", backend="pallas")),
+    }
+    out = {}
+    for name, fn in fns.items():
+        cf = fn.lower(f, d).compile()
+        flops = compat.cost_analysis(cf).get("flops", 0.0)
+        out[name] = {"us": time_fn(fn, f, d, warmup=1, iters=3),
+                     "flops": flops}
+    err = float(jnp.max(jnp.abs(fns["newton_schulz"](f, d)
+                                - fns["eigh"](f, d))))
+    out["newton_schulz"]["maxerr"] = err
+    return out
+
+
 def run(quick: bool = False):
     out = []
     LAST_RESULTS.clear()
@@ -192,6 +229,20 @@ def run(quick: bool = False):
     }
     out.append(row("stale_memory.fp8_over_fp32", 0.0,
                    f"ratio={fp8_b / f32_b:.3f}"))
+
+    # ---- Stage-4 inversion A/B: ref eigh vs Pallas Newton-Schulz ----
+    di = _bench_damped_inverse(quick)
+    for name, rec in di.items():
+        LAST_RESULTS[f"damped_inverse.{name}"] = rec
+        extra = (f"maxerr={rec['maxerr']:.2e}" if "maxerr" in rec
+                 else f"flops={rec['flops']:.3g}")
+        out.append(row(f"damped_inverse.{name}", rec["us"], extra))
+    LAST_RESULTS["damped_inverse.ns_over_eigh"] = {
+        "us_ratio": di["newton_schulz"]["us"] / di["eigh"]["us"],
+        "ns_gemm_flops": di["newton_schulz"]["flops"],
+    }
+    out.append(row("damped_inverse.ns_over_eigh", 0.0,
+                   f"us_ratio={di['newton_schulz']['us'] / di['eigh']['us']:.2f}"))
 
     # ---- attention backward A/B: recompute-through-ref VJP vs fused ----
     ab = _bench_attn_bwd(quick)

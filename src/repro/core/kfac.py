@@ -123,7 +123,9 @@ def damped_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
 
     f: (..., nb, b, b); damping broadcastable to (...,). Uses eigh for
     robustness (clamps negative eigenvalues that appear from bf16
-    accumulation)."""
+    accumulation). bf16 inputs solve in f32 (LAPACK has no bf16 eigh);
+    outputs are f32 either way."""
+    f = f.astype(jnp.float32)
     f = 0.5 * (f + jnp.swapaxes(f, -1, -2))  # re-symmetrize
     vals, vecs = jnp.linalg.eigh(f)
     d = jnp.asarray(damping)[..., None]  # broadcast over the eigenvalue axis
@@ -132,8 +134,10 @@ def damped_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
 
 
 def cholesky_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
-    """Cheaper inverse via Cholesky; requires f SPD after damping."""
+    """Cheaper inverse via Cholesky; requires f SPD after damping.
+    Solves in f32 like :func:`damped_inverse` (no bf16 LAPACK)."""
     b = f.shape[-1]
+    f = f.astype(jnp.float32)
     f = 0.5 * (f + jnp.swapaxes(f, -1, -2))
     d = jnp.asarray(damping)[..., None, None]
     eye = jnp.eye(b, dtype=f.dtype)
@@ -142,15 +146,83 @@ def cholesky_inverse(f: jax.Array, damping: jax.Array) -> jax.Array:
     return jax.scipy.linalg.cho_solve((chol, True), jnp.broadcast_to(eye, fd.shape))
 
 
+# Newton-Schulz knobs, defined ONCE here (the algorithm's home): everything
+# downstream — dispatch.damped_inverse, NGDConfig.ns_iters/ns_tol — defaults
+# to these, so tuning the cap or tolerance is a one-line change.
+NS_ITERS = 40   # iteration cap: covers damped condition numbers ~1e4 in f32
+NS_TOL = 1e-4   # relative fixed-point residual for early exit / fallback
+
+
+def newton_schulz_inverse(f: jax.Array, damping: jax.Array, *,
+                          iters: int = NS_ITERS,
+                          tol: float = NS_TOL) -> tuple[jax.Array, jax.Array]:
+    """Matmul-only blocked inverse of ``f + damping*I`` (Newton-Schulz).
+
+    The iteration ``X_{k+1} = X_k (2I - M X_k)`` with the spectral-norm
+    upper-bound init ``X_0 = M^T / (||M||_1 ||M||_inf)`` converges
+    quadratically for SPD ``M = f + damping*I`` (every eigenvalue of
+    ``M X_0`` lies in (0, 1]); this is the pure-jnp reference for the
+    Stage-4 Pallas kernel — the inverse built from nothing but GEMMs.
+
+    Per block, iterates freeze once the relative fixed-point residual
+    ``||I - M X_k||_F / ||I||_F`` drops to ``tol`` (the early exit); the
+    cap ``iters`` bounds the work for blocks that never contract that far.
+
+    f: (..., nb, b, b); damping broadcastable like :func:`damped_inverse`.
+    Returns ``(x, res)`` with ``res`` (..., nb) the relative residual of
+    the RETURNED iterate — callers use ``res > tol`` as the
+    failed-to-contract predicate (ill-conditioned block -> eigh fallback
+    in :mod:`repro.kernels.dispatch`).
+    """
+    b = f.shape[-1]
+    f = f.astype(jnp.float32)
+    f = 0.5 * (f + jnp.swapaxes(f, -1, -2))
+    # damping follows the damped_inverse broadcast convention: (...,) or
+    # (..., 1) against the block axis -> expand over (nb,) then the matrix
+    d = jnp.broadcast_to(jnp.asarray(damping, jnp.float32), f.shape[:-2])
+    eye = jnp.eye(b, dtype=jnp.float32)
+    m = f + d[..., None, None] * eye
+    # ||M||_1 * ||M||_inf >= ||M||_2^2, so every eigenvalue of M X_0 is in
+    # (0, 1] and I - M X_0 is a contraction
+    n1 = jnp.max(jnp.sum(jnp.abs(m), axis=-2), axis=-1)
+    ninf = jnp.max(jnp.sum(jnp.abs(m), axis=-1), axis=-1)
+    x0 = jnp.swapaxes(m, -1, -2) / (n1 * ninf)[..., None, None]
+    rnorm = 1.0 / np.sqrt(b)                       # 1 / ||I||_F
+
+    def body(_, x):
+        r = eye - jnp.einsum("...ab,...bc->...ac", m, x,
+                             preferred_element_type=jnp.float32)
+        res = jnp.sqrt(jnp.sum(r * r, axis=(-1, -2))) * rnorm
+        step = x + jnp.einsum("...ab,...bc->...ac", x, r,
+                              preferred_element_type=jnp.float32)
+        return jnp.where((res > tol)[..., None, None], step, x)
+
+    x = jax.lax.fori_loop(0, iters, body, x0)
+    # residual of the returned iterate (the in-loop one lags by a step)
+    r = eye - jnp.einsum("...ab,...bc->...ac", m, x,
+                         preferred_element_type=jnp.float32)
+    res = jnp.sqrt(jnp.sum(r * r, axis=(-1, -2))) * rnorm
+    return x, res
+
+
 def damped_factor_inverses(a: jax.Array, g: jax.Array, lam: float,
-                           d_a: int, d_g: int, *,
-                           method: str = "eigh") -> tuple[jax.Array, jax.Array]:
-    """Compute (A + pi*sqrt(lam) I)^-1 and (G + sqrt(lam)/pi I)^-1 (Eq. 12)."""
+                           d_a: int, d_g: int, *, method: str = "eigh",
+                           backend: Optional[str] = None,
+                           ns_iters: int = NS_ITERS,
+                           ns_tol: float = NS_TOL) -> tuple[jax.Array, jax.Array]:
+    """Compute (A + pi*sqrt(lam) I)^-1 and (G + sqrt(lam)/pi I)^-1 (Eq. 12).
+
+    Routes through :func:`repro.kernels.dispatch.damped_inverse` — the same
+    signature the optimizer's Stage-4 recompute uses — so ``method``
+    ("eigh" | "cholesky" | "newton_schulz") and ``backend`` select the
+    implementation in exactly one place."""
+    from repro.kernels import dispatch
     pi = pi_correction(a, g, d_a, d_g)
     sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
-    inv = damped_inverse if method == "eigh" else cholesky_inverse
-    a_inv = inv(a, (pi * sl)[..., None])       # broadcast over block axis
-    g_inv = inv(g, (sl / pi)[..., None])
+    kw = dict(method=method, backend=backend, ns_iters=ns_iters,
+              ns_tol=ns_tol)
+    a_inv = dispatch.damped_inverse(a, (pi * sl)[..., None], **kw)
+    g_inv = dispatch.damped_inverse(g, (sl / pi)[..., None], **kw)
     return a_inv, g_inv
 
 

@@ -38,7 +38,11 @@ class NGDConfig:
     stale: bool = True
     alpha: float = 0.1               # Frobenius similarity threshold
     estimator: str = "emp"           # "emp" | "1mc"
-    inverse_method: str = "eigh"     # "eigh" | "cholesky"
+    inverse_method: str = "eigh"     # "eigh" | "cholesky" | "newton_schulz"
+    ns_iters: int = kfac.NS_ITERS    # newton_schulz: iteration cap
+    ns_tol: float = kfac.NS_TOL      # newton_schulz: relative fixed-point
+                                     # residual for early exit; blocks still
+                                     # above it at the cap re-solve via eigh
     factor_dtype: Any = jnp.float32  # storage dtype for X_-1/X_-2 history:
                                      # a jnp dtype (dense), or "fp8_e4m3" /
                                      # "fp8_e5m2" (sym-packed payload +
@@ -61,11 +65,14 @@ def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
 
 
 def _damped_inv(stat: jax.Array, kind: str, damp: jax.Array,
-                method: str, backend: str = "auto") -> jax.Array:
+                method: str, backend: str = "auto",
+                ns_iters: int = kfac.NS_ITERS,
+                ns_tol: float = kfac.NS_TOL) -> jax.Array:
     """Apply-ready inverse: blocked matrix inverse or elementwise 1/(x+d)."""
     if kind == "full":
         from repro.kernels import dispatch
         return dispatch.damped_inverse(stat, damp[..., None], method=method,
+                                       ns_iters=ns_iters, ns_tol=ns_tol,
                                        backend=backend)  # bcast over blocks
     return 1.0 / (jnp.maximum(stat, 0.0) + damp[..., None])
 
@@ -240,10 +247,12 @@ class SPNGD:
                 sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
                 if a is not None:
                     pc["a"] = _damped_inv(a, info.spec.a_kind, pi * sl,
-                                          cfg.inverse_method, cfg.backend)
+                                          cfg.inverse_method, cfg.backend,
+                                          cfg.ns_iters, cfg.ns_tol)
                 if g is not None:
                     pc["g"] = _damped_inv(g, info.spec.g_kind, sl / pi,
-                                          cfg.inverse_method, cfg.backend)
+                                          cfg.inverse_method, cfg.backend,
+                                          cfg.ns_iters, cfg.ns_tol)
             for key in ("d", "uw"):
                 if key in normalized:
                     pc[key] = normalized[key]

@@ -183,20 +183,104 @@ def block_precond_right(w: jax.Array, binv: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
-# damped_inverse: (F + damping I)^-1 per block — ref-only today; the slot
-# exists so a Pallas Newton-Schulz / Cholesky kernel drops in via register().
+# damped_inverse: (F + damping I)^-1 per block — the Stage-4 inversion.
+#
+# method "eigh" / "cholesky" are direct factorizations: not matmul-shaped,
+# so they are ref-only and the pallas backend routes them straight to ref
+# (the same op-by-op degradation as an unregistered op). method
+# "newton_schulz" is matmul-only: ref = the jnp blocked iteration
+# (kfac.newton_schulz_inverse), pallas = the VMEM-resident kernel
+# (kernels/newton_schulz.py) — both share one failure contract: any block
+# whose relative residual ||I - M X||_F / ||I||_F is still above ns_tol
+# after ns_iters capped iterations is re-solved with the eigh path (and the
+# event logged), so an ill-conditioned block can never silently ship a
+# wrong inverse. Impl signature: fn(f, damping, method, ns_iters, ns_tol)
+# -> (inv, res) with res (...,) per-block residual (zeros for the direct
+# methods).
 # ---------------------------------------------------------------------------
 
-def _damped_inverse_ref(f, damping, method: str):
+# the canonical iteration cap / residual tolerance live next to the
+# algorithm (kfac is import-safe here: its own dispatch imports are lazy)
+from repro.core.kfac import NS_ITERS, NS_TOL  # noqa: E402
+
+
+def _ns_eigh_fallback(f, damping, x, res, ns_tol):
+    """Replace blocks the iteration cannot be trusted on with the eigh
+    inverse. Two triggers, both folded into the returned residual:
+
+    * res > ns_tol — the capped iteration failed to contract;
+    * min diag(X) <= 0 — an SPD inverse must have a strictly positive
+      diagonal, so a non-positive entry means the damped factor was
+      INDEFINITE (bf16-accumulation noise can push small eigenvalues
+      negative). Newton-Schulz then converges to the true inverse of the
+      indefinite matrix, but the framework's contract is eigh's clamped
+      semantics (negative eigenvalues -> 0 before damping); those blocks
+      must re-solve. Their residual is forced to +inf so callers reading
+      ``ns_converged`` see them as fallbacks.
+
+    The cond keeps the eigh work off the hot path when every block is
+    trusted. Returns (x, res)."""
     from repro.core import kfac
+    diag = jnp.diagonal(x, axis1=-2, axis2=-1)
+    res = jnp.where(jnp.min(diag, axis=-1) > 0, res, jnp.inf)
+    bad = res > ns_tol
+
+    def fb(x):
+        jax.debug.print("damped_inverse[newton_schulz]: {n} block(s) failed "
+                        "to contract below tol={t} (or lost SPD); re-solved "
+                        "via eigh", n=jnp.sum(bad), t=ns_tol)
+        return jnp.where(bad[..., None, None],
+                         kfac.damped_inverse(f, damping), x)
+
+    return jax.lax.cond(jnp.any(bad), fb, lambda x: x, x), res
+
+
+def _damped_inverse_ref(f, damping, method: str, ns_iters: int,
+                        ns_tol: float):
+    from repro.core import kfac
+    if method == "newton_schulz":
+        x, res = kfac.newton_schulz_inverse(f, damping, iters=ns_iters,
+                                            tol=ns_tol)
+        return _ns_eigh_fallback(f, damping, x, res, ns_tol)
+    if method not in ("eigh", "cholesky"):
+        raise ValueError(f"unknown inverse method {method!r}; expected "
+                         "'eigh' | 'cholesky' | 'newton_schulz'")
     inv = kfac.damped_inverse if method == "eigh" else kfac.cholesky_inverse
-    return inv(f, damping)
+    return inv(f, damping), jnp.zeros(f.shape[:-2], jnp.float32)
+
+
+def _damped_inverse_pallas(f, damping, method: str, ns_iters: int,
+                           ns_tol: float):
+    from repro.kernels import ops
+    if method != "newton_schulz" or f.shape[-1] > ops.NS_KERNEL_MAX_DIM:
+        # direct methods (and over-VMEM blocks) degrade to ref in place
+        return _damped_inverse_ref(f, damping, method, ns_iters, ns_tol)
+    b = f.shape[-1]
+    f32 = f.astype(jnp.float32)
+    m = 0.5 * (f32 + jnp.swapaxes(f32, -1, -2))
+    d = jnp.broadcast_to(jnp.asarray(damping, jnp.float32), f.shape[:-2])
+    m = m + d[..., None, None] * jnp.eye(b, dtype=jnp.float32)
+    lead = m.shape[:-2]
+    x, res = ops.ns_inverse(m.reshape((-1, b, b)), iters=ns_iters,
+                            tol=ns_tol)
+    x = x.reshape(lead + (b, b))
+    res = res.reshape(lead)
+    return _ns_eigh_fallback(f, damping, x, res, ns_tol)
 
 
 def damped_inverse(f: jax.Array, damping, *, method: str = "eigh",
-                   backend: str | None = None) -> jax.Array:
+                   ns_iters: int = NS_ITERS, ns_tol: float = NS_TOL,
+                   backend: str | None = None, return_info: bool = False):
+    """Stage-4 blocked damped inverse. With ``return_info=True`` also
+    returns ``{"ns_res", "ns_converged"}`` per block — the test harness's
+    (and any monitoring hook's) view of which blocks took the eigh
+    fallback; for the direct methods the residual is identically zero."""
     which = resolve(backend, f.shape[-1])
-    return lookup("damped_inverse", which)(f, damping, method)
+    inv, res = lookup("damped_inverse", which)(f, damping, method,
+                                               ns_iters, ns_tol)
+    if return_info:
+        return inv, {"ns_res": res, "ns_converged": res <= ns_tol}
+    return inv
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +426,7 @@ register("block_precond_left", "pallas", _precond_left_pallas)
 register("block_precond_right", "ref", _precond_right_ref)
 register("block_precond_right", "pallas", _precond_right_pallas)
 register("damped_inverse", "ref", _damped_inverse_ref)
+register("damped_inverse", "pallas", _damped_inverse_pallas)
 register("fp8_pack", "ref", _fp8_pack_ref)
 register("fp8_pack", "pallas", _fp8_pack_pallas)
 register("fp8_unpack", "ref", _fp8_unpack_ref)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: blocked Newton-Schulz damped inverse (Stage-4).
+
+SP-NGD recomputes ``(F + lambda I)^-1`` per Kronecker-factor block on every
+refresh step. Eigendecomposition / Cholesky are the one Stage-4 workload
+that cannot ride the MXU (not matmul-shaped); the Newton-Schulz iteration
+
+    X_{k+1} = X_k (2I - M X_k) = X_k + X_k (I - M X_k)
+
+is nothing BUT matmuls, so this kernel moves the inversion onto the MXU.
+
+Contract per grid instance (one factor block, fully VMEM-resident):
+
+* input is the already-damped, already-symmetrized ``M = F + lambda I``
+  (the XLA side owns damping/symmetrization — pure elementwise prep, the
+  same division of labour as the ``delta`` rowsum in the attention
+  backward);
+* the initial iterate is the spectral-norm upper-bound scaling computed
+  in-kernel from one pass over ``M``:
+
+      X_0 = M / (||M||_1 ||M||_inf)
+
+  (``M`` symmetric, so ``M^T = M``); ``||M||_1 ||M||_inf >= ||M||_2^2``
+  places every eigenvalue of ``M X_0`` in (0, 1], making ``I - M X_0`` a
+  contraction for SPD ``M``;
+* the iteration runs under a ``fori_loop`` cap of ``iters``; each step
+  measures the fixed-point residual ``||I - M X_k||_F / ||I||_F`` and
+  freezes the iterate once it reaches ``tol`` (the early exit — further
+  trips keep the converged X bit-stable);
+* outputs are the final iterate AND its residual, so the dispatch layer
+  can detect blocks that failed to contract (ill-conditioned under weak
+  damping) and re-solve exactly those via the eigh path.
+
+The whole block stays resident: M, X and the step temporary are
+``3 * b^2 * 4`` bytes, which caps the kernel at b = 1024 against the
+~16 MB/core VMEM (``ops.NS_KERNEL_MAX_DIM``); larger blocks route to the
+jnp reference, where XLA tiles the matmuls itself.
+
+Grid: (g,); one program per block, no revisit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ns_kernel(m_ref, x_ref, res_ref, *, iters: int, tol: float):
+    m = m_ref[0].astype(jnp.float32)                 # (bp, bp)
+    bp = m.shape[0]
+    ri = jax.lax.broadcasted_iota(jnp.int32, (bp, bp), 0)
+    ci = jax.lax.broadcasted_iota(jnp.int32, (bp, bp), 1)
+    eye = jnp.where(ri == ci, 1.0, 0.0).astype(jnp.float32)
+
+    am = jnp.abs(m)
+    n1 = jnp.max(jnp.sum(am, axis=0))                # max abs column sum
+    ninf = jnp.max(jnp.sum(am, axis=1))              # max abs row sum
+    # M is symmetric by contract, so M^T / (n1 * ninf) == M * inv_scale
+    x = m * (1.0 / (n1 * ninf))
+    rnorm = 1.0 / (bp ** 0.5)                        # 1 / ||I||_F, static
+
+    def mm(a, b):
+        return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    def body(_, x):
+        r = eye - mm(m, x)
+        res = jnp.sqrt(jnp.sum(r * r)) * rnorm
+        # early exit: once res <= tol the iterate freezes (any further
+        # trips of the capped loop return X unchanged)
+        return jnp.where(res > tol, x + mm(x, r), x)
+
+    x = jax.lax.fori_loop(0, iters, body, x)
+    # residual of the RETURNED iterate (the in-loop value lags one step);
+    # the dispatch layer reads res > tol as "failed to contract"
+    r = eye - mm(m, x)
+    res_ref[...] = (jnp.sqrt(jnp.sum(r * r)) * rnorm).reshape(1, 1)
+    x_ref[...] = x[None]
+
+
+def ns_inverse_blocks(m: jax.Array, *, iters: int, tol: float,
+                      interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """m: (g, bp, bp) f32 symmetric damped blocks ->
+    (x (g, bp, bp) f32, res (g, 1) f32)."""
+    g, bp, _ = m.shape
+    grid = (g,)
+    return pl.pallas_call(
+        functools.partial(_ns_kernel, iters=iters, tol=tol),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bp, bp), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, bp, bp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, bp, bp), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import kfac_factor as _factor
 from repro.kernels import kfac_precond as _precond
+from repro.kernels import newton_schulz as _ns
 from repro.kernels import quant_pack as _quant
 from repro.kernels import swa_attention as _swa
 
@@ -92,6 +93,55 @@ def _pad_seq(s: int, bq: int, bk: int) -> int:
     """Padded sequence length: a multiple of BOTH tile sizes (their lcm)."""
     tile = math.lcm(bq, bk)
     return -(-s // tile) * tile
+
+
+# largest factor block the Newton-Schulz kernel keeps VMEM-resident: one
+# block costs ~3 * b^2 * 4 bytes (M, X, step temporary); 1024 -> ~12.6 MB
+# against the ~16 MB/core budget. Dispatch routes bigger blocks to the jnp
+# reference iteration (XLA tiles those matmuls itself).
+NS_KERNEL_MAX_DIM = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "tol", "interpret"))
+def ns_inverse(m: jax.Array, *, iters: int, tol: float,
+               interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Blocked Newton-Schulz inverse of already-damped symmetric blocks.
+
+    m: (g, b, b) f32 (``M = F + lambda I``, symmetrized by the caller) ->
+    (x (g, b, b) f32 ~= M^-1, res (g,) f32 relative fixed-point residual
+    ``||I - M x||_F / ||I||_F`` of the returned iterate).
+
+    Blocks pad to the 128-lane boundary as ``[[M, 0], [0, dpad*I]]`` with
+    ``dpad = ||M||_inf`` per block — an eigenvalue the iteration already
+    has to cover (lambda_max <= ||M||_inf), so padding never slows the
+    contraction the way a fixed pad value (e.g. 1) would for tiny- or
+    huge-scaled factors. The padded rows/cols are sliced off below, and
+    the kernel's residual (normalized by the PADDED ||I||_F) is rescaled
+    back to the caller's b so the fallback decision matches the unpadded
+    reference iteration instead of being sqrt(bp/b) looser.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    if m.shape[-1] > NS_KERNEL_MAX_DIM:
+        raise ValueError(f"ns_inverse holds whole blocks in VMEM; "
+                         f"b={m.shape[-1]} exceeds NS_KERNEL_MAX_DIM="
+                         f"{NS_KERNEL_MAX_DIM} (route to the ref iteration)")
+    g, b, _ = m.shape
+    bp = -(-b // 128) * 128
+    if bp != b:
+        dpad = jnp.maximum(jnp.max(jnp.sum(jnp.abs(m), axis=-1), axis=-1),
+                           jnp.float32(1e-30))           # (g,): ||M||_inf
+        m = jnp.pad(m, ((0, 0), (0, bp - b), (0, bp - b)))
+        pad_diag = jnp.where(jnp.arange(bp) >= b, 1.0, 0.0)
+        m = m + dpad[:, None, None] * jnp.diag(pad_diag)
+    # the kernel normalizes by the PADDED 1/||I_bp||_F: hand it the
+    # equivalently-rescaled freeze threshold and scale the residual back,
+    # so both the early exit and the fallback decision match the unpadded
+    # reference iteration exactly (the padded identity's own residual
+    # rides along, erring toward the eigh fallback)
+    scale = math.sqrt(bp / b)
+    x, res = _ns.ns_inverse_blocks(m, iters=iters, tol=tol / scale,
+                                   interpret=interpret)
+    return x[:, :b, :b], res[:, 0] * scale
 
 
 # VMEM budget for one quantization tile, in ELEMENTS of the packed row

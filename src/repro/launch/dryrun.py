@@ -87,7 +87,8 @@ def active_param_fraction(cfg: ArchConfig) -> float:
 def build_case(arch: str, shape_name: str, mesh, *,
                schedule: str = "auto", tp_align: bool = False,
                rwkv_chunk: int = 0, fast: bool = False,
-               backend: str = "auto", factor_dtype: str = "f32"):
+               backend: str = "auto", factor_dtype: str = "f32",
+               inverse_method: str = "eigh"):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
@@ -97,7 +98,10 @@ def build_case(arch: str, shape_name: str, mesh, *,
     jit and shard_map schedules via the arch config and NGDConfig.
     factor_dtype: factor-history storage ("f32" | "bf16" | "fp8_e4m3" |
     "fp8_e5m2"; fp8 stores sym-packed payloads + per-block scales, so the
-    dry-run's memory_analysis sees the compressed optimizer state)."""
+    dry-run's memory_analysis sees the compressed optimizer state).
+    inverse_method: Stage-4 inversion ("eigh" | "cholesky" |
+    "newton_schulz" — the matmul-only iteration the dry-run's cost_analysis
+    then counts as GEMM FLOPs instead of an opaque eigendecomposition)."""
     cfg = effective_config(arch, shape_name)
     if backend != "auto":
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -153,6 +157,7 @@ def build_case(arch: str, shape_name: str, mesh, *,
         opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                     model.site_counts,
                     NGDConfig(backend=cfg.backend,
+                              inverse_method=inverse_method,
                               factor_dtype=FACTOR_DTYPES[factor_dtype]),
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
@@ -220,21 +225,22 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
              save_hlo: Optional[str] = None, schedule: str = "auto",
              tp_align: bool = False, rwkv_chunk: int = 0,
              fast: bool = False, backend: str = "auto",
-             factor_dtype: str = "f32") -> dict:
+             factor_dtype: str = "f32",
+             inverse_method: str = "eigh") -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
     t0 = time.time()
     rec = {"arch": arch, "shape": shape_name, "schedule": schedule,
            "tp_align": tp_align, "backend": backend,
-           "factor_dtype": factor_dtype,
+           "factor_dtype": factor_dtype, "inverse_method": inverse_method,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
         with compat.set_mesh(mesh):
             step, args, n_params, label = build_case(
                 arch, shape_name, mesh, schedule=schedule, tp_align=tp_align,
                 rwkv_chunk=rwkv_chunk, fast=fast, backend=backend,
-                factor_dtype=factor_dtype)
+                factor_dtype=factor_dtype, inverse_method=inverse_method)
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
@@ -328,6 +334,12 @@ def main():
                     help="factor-history storage dtype (repro.quant); fp8 "
                          "shrinks the optimizer-state arrays the dry-run's "
                          "memory_analysis accounts")
+    ap.add_argument("--inverse-method", default="eigh",
+                    choices=["eigh", "cholesky", "newton_schulz"],
+                    help="Stage-4 factor inversion; newton_schulz is the "
+                         "matmul-only blocked iteration (MXU-resident under "
+                         "--backend pallas, eigh fallback for blocks that "
+                         "fail to contract)")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -346,6 +358,8 @@ def main():
         variant += f"__{args.backend}"
     if args.factor_dtype != "f32":
         variant += f"__{args.factor_dtype}"
+    if args.inverse_method != "eigh":
+        variant += f"__{args.inverse_method}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -367,7 +381,8 @@ def main():
                                schedule=args.schedule, tp_align=args.tp_align,
                                rwkv_chunk=args.rwkv_chunk, fast=args.fast,
                                backend=args.backend,
-                               factor_dtype=args.factor_dtype)
+                               factor_dtype=args.factor_dtype,
+                               inverse_method=args.inverse_method)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -311,6 +311,12 @@ def main():
                          "and the statistics payload ledger; fp8 variants "
                          "store sym-packed payloads + per-block scales "
                          "(repro.quant) and dequantize on read")
+    ap.add_argument("--inverse-method", default="eigh",
+                    choices=["eigh", "cholesky", "newton_schulz"],
+                    help="Stage-4 factor inversion: direct factorization "
+                         "(eigh/cholesky) or the matmul-only Newton-Schulz "
+                         "iteration (Pallas kernel under --backend pallas; "
+                         "blocks that fail to contract re-solve via eigh)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
@@ -331,6 +337,7 @@ def main():
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts,
                 NGDConfig(damping=args.damping, backend=args.backend,
+                          inverse_method=args.inverse_method,
                           factor_dtype=FACTOR_DTYPES[args.factor_dtype]))
     state = opt.init(params)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,

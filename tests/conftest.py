@@ -1,8 +1,28 @@
 """Give the test process 8 virtual CPU devices (for the distributed-schedule
 and collective-analyzer tests) BEFORE jax initializes. Everything else runs
 unchanged on device 0. The 512-device setting stays exclusive to
-repro.launch.dryrun, per the launcher contract."""
+repro.launch.dryrun, per the launcher contract.
+
+Also registers hypothesis profiles when hypothesis is installed. The
+property tests deliberately do NOT pin max_examples in their @settings
+(a per-test pin would override the profile and make the nightly sweep a
+no-op); the profile is the single knob:
+  * "ci" (default)  — 12 examples/test: shape diversity without re-tracing
+    the jitted kernels dozens of times per property
+  * "nightly"       — 200 examples/test, loaded by the scheduled CI job
+    via HYPOTHESIS_PROFILE=nightly
+"""
 import os
 
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+try:
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", deadline=None, max_examples=12)
+    _hyp_settings.register_profile("nightly", deadline=None,
+                                   max_examples=200)
+    _hyp_settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ModuleNotFoundError:
+    pass  # bare env: tests/hypothesis_compat.py provides the fallback

@@ -156,15 +156,33 @@ def test_kfac_factor_rejects_rectangular_tiles():
         ops.kfac_factor(x, bm=16, bn=32, interpret=True)
 
 
-def test_unregistered_pallas_op_falls_back_to_ref():
-    # damped_inverse has no pallas impl today: explicit "pallas" must still
-    # produce the ref result instead of failing (ops are ported one at a time)
+def test_direct_inverse_methods_degrade_pallas_to_ref():
+    # eigh/cholesky are not matmul-shaped, so the pallas damped_inverse impl
+    # must route them to the ref callable bit-for-bit (the same op-by-op
+    # degradation an unregistered op gets); only method="newton_schulz"
+    # engages the kernel
     rng = np.random.RandomState(1)
     m = rng.randn(2, 8, 8)
     f = jnp.asarray(m @ m.transpose(0, 2, 1) + 8 * np.eye(8), jnp.float32)
-    a = dispatch.damped_inverse(f, jnp.asarray(1e-3), backend="ref")
-    b = dispatch.damped_inverse(f, jnp.asarray(1e-3), backend="pallas")
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for method in ("eigh", "cholesky"):
+        a = dispatch.damped_inverse(f, jnp.asarray(1e-3), method=method,
+                                    backend="ref")
+        b = dispatch.damped_inverse(f, jnp.asarray(1e-3), method=method,
+                                    backend="pallas")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unregistered_backend_falls_back_to_ref():
+    # ops are ported one at a time: an op with no impl for the resolved
+    # backend must fall back to ref instead of failing
+    def only_ref(x):
+        return x + 1.0
+    dispatch.register("only_ref_op", "ref", only_ref)
+    try:
+        fn = dispatch.lookup("only_ref_op", "pallas")
+        assert fn is only_ref
+    finally:
+        dispatch._TABLE.pop("only_ref_op", None)
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +206,10 @@ def test_block_precond_mixed_tiles_pad_to_lcm(b, bm, bk):
 # end-to-end: NGDConfig(backend="pallas") trains and matches "ref"
 # ---------------------------------------------------------------------------
 
-def _tiny_setup(backend, arch="llama3_2_1b"):
+def _tiny_setup(backend, arch="llama3_2_1b", **ngd_kw):
+    """``ngd_kw`` forwards extra NGDConfig fields (inverse_method,
+    factor_dtype, ...) so sibling suites can reuse this fixture for their
+    own backend A/Bs (test_attention_grad, test_inverse_numerics)."""
     from repro.configs import get_config
     from repro.core.ngd import NGDConfig, SPNGD
     from repro.models.transformer import DecoderLM
@@ -198,7 +219,8 @@ def _tiny_setup(backend, arch="llama3_2_1b"):
     model = DecoderLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
-                model.site_counts, NGDConfig(damping=1e-3, backend=backend))
+                model.site_counts,
+                NGDConfig(damping=1e-3, backend=backend, **ngd_kw))
     state = opt.init(params)
     rng = np.random.RandomState(0)
     batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (4, 16)),
@@ -209,9 +231,10 @@ def _tiny_setup(backend, arch="llama3_2_1b"):
     return model, opt, params, state, batch, flags
 
 
-def _losses_jit(backend, steps=20, arch="llama3_2_1b"):
+def _losses_jit(backend, steps=20, arch="llama3_2_1b", **ngd_kw):
     from repro.launch.train import make_train_step
-    model, opt, params, state, batch, flags = _tiny_setup(backend, arch)
+    model, opt, params, state, batch, flags = _tiny_setup(backend, arch,
+                                                          **ngd_kw)
     step = jax.jit(make_train_step(model, opt))
     out = []
     for _ in range(steps):

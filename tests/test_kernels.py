@@ -35,7 +35,7 @@ def test_factor_is_exactly_symmetric():
     np.testing.assert_array_equal(out, out.T)
 
 
-@settings(max_examples=15, deadline=None)
+@settings(deadline=None)
 @given(n=st.integers(4, 96), d=st.integers(4, 64),
        bm=st.sampled_from([8, 16, 32]), bk=st.sampled_from([16, 32]))
 def test_factor_property(n, d, bm, bk):
@@ -62,7 +62,7 @@ def test_block_precond(nb, b, m, dtype):
     np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(nb=st.integers(1, 4), b=st.integers(8, 48), m=st.integers(8, 64))
 def test_block_precond_property(nb, b, m):
     rng = np.random.RandomState(nb * 1000 + b * 10 + m)
@@ -121,7 +121,7 @@ def test_swa_matches_model_attention():
     np.testing.assert_allclose(kern, model_out, rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=10, deadline=None)
+@settings(deadline=None)
 @given(s=st.integers(8, 80), window=st.integers(0, 20),
        hd=st.sampled_from([8, 16, 32]))
 def test_swa_property(s, window, hd):

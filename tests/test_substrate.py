@@ -99,7 +99,7 @@ def test_vlm_input_specs_have_pixel_embeds():
                                            cfg.frontend_dim)
 
 
-@settings(max_examples=8, deadline=None)
+@settings(deadline=None)
 @given(chunk=st.sampled_from([2, 4, 8]), s=st.sampled_from([16, 32]))
 def test_chunked_wkv_scan_property(chunk, s):
     from repro.models.rwkv import _wkv_scan
