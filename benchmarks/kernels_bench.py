@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -158,6 +159,105 @@ def _bench_damped_inverse(quick: bool):
     return out
 
 
+def _bench_comm(quick: bool):
+    """Stage-3 strategy A/B (repro.comm), run in a SUBPROCESS with 8
+    virtual CPU devices so the ring is a real multi-device collective —
+    setting the device count in this process would oversubscribe the CPU
+    and skew every other benchmark row's timing (the cross-PR A/B ratios
+    in BENCH_kernels.json must stay comparable). Falls back to an
+    in-process run on whatever devices exist if the subprocess fails."""
+    import json
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    os.environ.get("PYTHONPATH", "")) if p)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.kernels_bench",
+             "--comm-json"] + (["--quick"] if quick else []),
+            env=env, cwd=root, capture_output=True, text=True, check=True)
+        return json.loads(proc.stdout.splitlines()[-1])
+    except (subprocess.CalledProcessError, ValueError, IndexError) as e:
+        print(f"# comm A/B subprocess failed ({e}); running in-process on "
+              f"{len(jax.devices())} device(s)", file=sys.stderr)
+        return _bench_comm_local(quick)
+
+
+def _bench_comm_local(quick: bool):
+    """The comm A/B body: reduce one synthetic raw-stats tree over every
+    available device with each strategy under shard_map, reporting wall
+    time, max |err| vs the dense psum_scatter baseline, and the reducer's
+    wire-byte accounting (the durable column on CPU — wall time here is
+    interpret-mode collectives over virtual devices). Returns {name: rec}."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm import FactorReducer, make_comm_config
+    from repro.launch import compat
+
+    ndev = len(jax.devices())
+    mesh = compat.make_mesh((ndev,), ("data",))
+    nb, b = (2, 32) if quick else (4, 64)
+    lead = 2 * ndev                      # scatters over the data axis
+    template = {"fam": {
+        "a": jax.ShapeDtypeStruct((lead, nb, b, b), jnp.float32),
+        "d": jax.ShapeDtypeStruct((lead, nb * b), jnp.float32),
+    }}
+    rng = np.random.RandomState(0)
+    f = rng.randn(ndev, lead, nb, b, b).astype(np.float32)
+    raw_all = {"fam": {
+        "a": jnp.asarray(f + np.swapaxes(f, -1, -2)),
+        "d": jnp.asarray(rng.randn(ndev, lead, nb * b), np.float32) ** 2,
+    }}
+
+    out = {}
+    results = {}
+    for strat in ("dense", "ring", "ring_fp8"):
+        red = FactorReducer(mesh, comm=make_comm_config(strat),
+                            template=template,
+                            sym_fn=lambda fam, key: key == "a")
+
+        def body(raw):
+            return red.reduce(jax.tree.map(lambda x: x[0], raw))
+
+        in_specs = jax.tree.map(lambda _: P("data"), raw_all)
+        fn = jax.jit(compat.shard_map(
+            body, mesh=mesh, in_specs=(in_specs,),
+            out_specs=red.out_specs(), axis_names={"data"}))
+        t = time_fn(fn, raw_all, warmup=1, iters=3)
+        results[strat] = jax.tree.map(np.asarray, fn(raw_all))
+        out[f"comm.reduce_{strat}"] = {
+            "us": t,
+            "wire_bytes": sum(red.wire_bytes_per_stat().values()),
+        }
+    for strat in ("ring", "ring_fp8"):
+        err = max(float(np.max(np.abs(a - d))) for a, d in zip(
+            jax.tree.leaves(results[strat]),
+            jax.tree.leaves(results["dense"])))
+        out[f"comm.reduce_{strat}"]["maxerr_vs_dense"] = err
+    wd = out["comm.reduce_dense"]["wire_bytes"]
+    out["comm.ring_vs_dense"] = {
+        "wire_ratio": out["comm.reduce_ring"]["wire_bytes"] / wd,
+        "us_ratio": (out["comm.reduce_ring"]["us"]
+                     / out["comm.reduce_dense"]["us"]),
+        "maxerr": out["comm.reduce_ring"]["maxerr_vs_dense"],
+        "devices": ndev,
+    }
+    # acceptance gauge: fp8 wire <= 0.3x the dense f32 collective payload
+    out["comm.wire_fp8_over_f32"] = {
+        "ratio": out["comm.reduce_ring_fp8"]["wire_bytes"] / wd,
+        "fp8_wire_bytes": out["comm.reduce_ring_fp8"]["wire_bytes"],
+        "f32_dense_wire_bytes": wd,
+        "maxerr": out["comm.reduce_ring_fp8"]["maxerr_vs_dense"],
+    }
+    return out
+
+
 def run(quick: bool = False):
     out = []
     LAST_RESULTS.clear()
@@ -244,6 +344,19 @@ def run(quick: bool = False):
     out.append(row("damped_inverse.ns_over_eigh", 0.0,
                    f"us_ratio={di['newton_schulz']['us'] / di['eigh']['us']:.2f}"))
 
+    # ---- Stage-3 comm strategy A/B: dense vs ring vs ring_fp8 ----
+    cm = _bench_comm(quick)
+    for name, rec in cm.items():
+        LAST_RESULTS[name] = rec
+        if "ratio" in rec:
+            extra = f"ratio={rec['ratio']:.3f}"
+        elif "wire_ratio" in rec:
+            extra = (f"wire_ratio={rec['wire_ratio']:.3f} "
+                     f"maxerr={rec['maxerr']:.2e}")
+        else:
+            extra = f"wire_bytes={rec['wire_bytes']}"
+        out.append(row(name, rec.get("us", 0.0), extra))
+
     # ---- attention backward A/B: recompute-through-ref VJP vs fused ----
     ab = _bench_attn_bwd(quick)
     for name, rec in ab.items():
@@ -272,5 +385,12 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    import sys
+    if "--comm-json" in sys.argv:
+        # subprocess entry for _bench_comm: emit the comm A/B dict as the
+        # last stdout line (the parent parses it)
+        import json
+        print(json.dumps(_bench_comm_local(quick="--quick" in sys.argv)))
+    else:
+        for r in run():
+            print(r)

@@ -5,7 +5,9 @@ Trains the ConvNet with SP-NGD for N steps, letting the IntervalController
 schedule refreshes; reports (a) the stale-vs-dense byte reduction rate for
 the statistics ReduceScatterV traffic (symmetric-packed bytes), matching
 Table 2's "reduction" column, and (b) the per-step byte series (Fig. 6)
-written to experiments/comm_volume.csv. Also reports the same run at two
+written to ``experiments/comm_volume_bs{bs}.csv`` — one row per step with
+the storage-ledger bytes plus a wire-bytes column per Stage-3 strategy
+(dense / ring / ring_fp8; ``repro.comm``). Also reports the same run at two
 batch sizes — the paper's observation is that LARGER batches fluctuate less
 and reduce more.
 """
@@ -19,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import make_convnet, row
+from repro.comm import STRATEGIES, make_comm_config
 from repro.core.ngd import NGDConfig, SPNGD
 from repro.core.stale import IntervalController
 from repro.data.synthetic import image_batches
@@ -30,8 +33,10 @@ def _run_training(batch_size: int, steps: int, seed: int = 0):
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts, NGDConfig(damping=1e-3))
     state = opt.init(params)
+    wire = {s: opt.wire_bytes(make_comm_config(s)) for s in STRATEGIES}
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
-                              bytes_per_stat=opt.stat_bytes())
+                              bytes_per_stat=opt.stat_bytes(),
+                              wire_bytes_per_stat=wire["dense"])
     step_j = jax.jit(opt.step)
     fast_j = jax.jit(opt.step_fast)
     series = []
@@ -48,11 +53,13 @@ def _run_training(batch_size: int, steps: int, seed: int = 0):
         else:
             params, state, m = fast_j(params, state, batch, 1e-3, 0.05, 0.9)
             ctrl.update(t, flags, {})
-        step_bytes = sum(ctrl.stats[k].bytes_per_refresh
-                         for k, v in flags.items() if v)
+        refreshed = [k for k, v in flags.items() if v]
+        step_bytes = sum(ctrl.stats[k].bytes_per_refresh for k in refreshed)
         a_bytes = sum(ctrl.stats[k].bytes_per_refresh
-                      for k, v in flags.items() if v and k.endswith(".a"))
-        series.append((t, step_bytes, a_bytes, float(m["loss"])))
+                      for k in refreshed if k.endswith(".a"))
+        wire_cols = tuple(sum(wire[s][k] for k in refreshed)
+                          for s in STRATEGIES)
+        series.append((t, step_bytes, a_bytes, wire_cols, float(m["loss"])))
     return ctrl, series
 
 
@@ -60,15 +67,32 @@ def run(quick: bool = False):
     steps = 30 if quick else 120
     out = []
     os.makedirs("experiments", exist_ok=True)
+    # per-refresh wire volume is a property of the stat template, not of
+    # the batch size: compute it once, outside the per-bs training loop
+    model, _ = make_convnet(widths=(8, 16), blocks=1)
+    opt = SPNGD(model.loss, model.site_infos(), model.fstats,
+                model.site_counts, NGDConfig(damping=1e-3))
+    wire_totals = {s: sum(opt.wire_bytes(make_comm_config(s)).values())
+                   for s in STRATEGIES}
     for bs in ([64] if quick else [32, 128]):
         ctrl, series = _run_training(bs, steps)
         s = ctrl.summary()
         out.append(row(f"table2.stale_reduction_bs{bs}", 0.0,
                        f"reduction={100 * s['reduction_rate']:.1f}%"))
         with open(f"experiments/comm_volume_bs{bs}.csv", "w") as f:
-            f.write("step,stat_bytes,a_bytes,loss\n")
-            for t, b, ab, l in series:
-                f.write(f"{t},{b},{ab},{l:.4f}\n")
+            f.write("step,stat_bytes,a_bytes,"
+                    + ",".join(f"wire_{s}" for s in STRATEGIES) + ",loss\n")
+            for t, b, ab, wc, l in series:
+                f.write(f"{t},{b},{ab},"
+                        + ",".join(str(w) for w in wc) + f",{l:.4f}\n")
+    # per-refresh Stage-3 wire volume per strategy (repro.comm accounting:
+    # dense = raw f32 blocked arrays, ring = sym-packed f32 triangles,
+    # ring_fp8 = fp8 payload + per-block f32 scales)
+    for s in STRATEGIES:
+        out.append(row(f"table2.wire_bytes_{s}", 0.0,
+                       f"bytes={wire_totals[s]}"))
+    out.append(row("table2.wire_fp8_over_f32", 0.0,
+                   f"ratio={wire_totals['ring_fp8'] / wire_totals['dense']:.3f}"))
     # symmetric packing saving (paper §5.2): triangular vs full factor bytes
     model, _ = make_convnet(widths=(8, 16), blocks=1)
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,

@@ -1,10 +1,17 @@
 """Generate the §Dry-run and §Roofline tables for EXPERIMENTS.md from
-experiments/dryrun/*.json.
+experiments/dryrun/*.json, plus the §Stage-3 comm-volume table from
+experiments/comm_volume_bs*.csv.
+
+Both input sets are gitignored build artifacts; when they are missing this
+script says which command regenerates them instead of crashing or silently
+printing empty tables.
 
     PYTHONPATH=src python experiments/make_report.py > experiments/report.md
 """
+import csv
 import glob
 import json
+import sys
 
 
 def fmt_bytes(b):
@@ -23,9 +30,51 @@ def fmt_s(x):
     return f"{x:.2f}s"
 
 
+def comm_volume_section():
+    """§Stage-3 comm volume from the stale_reduction benchmark's CSVs."""
+    files = sorted(glob.glob("experiments/comm_volume_bs*.csv"))
+    if not files:
+        print("### Stage-3 comm volume\n")
+        print("_experiments/comm_volume_bs*.csv not found (gitignored); "
+              "regenerate with `PYTHONPATH=src python -m benchmarks.run "
+              "--only stale_reduction`._\n")
+        return
+    print("### Stage-3 comm volume (per-step refreshed bytes, "
+          "Fig. 6 series totals)\n")
+    print("| series | steps | stat bytes | wire dense | wire ring "
+          "| wire ring_fp8 | fp8/dense |")
+    print("|---|---|---|---|---|---|---|")
+    for path in files:
+        with open(path) as f:
+            rows = list(csv.DictReader(f))
+        if not rows or "wire_dense" not in rows[0]:
+            print(f"_{path} is from a pre-wire-column run; regenerate it._")
+            continue
+        tot = {k: sum(int(float(r[k])) for r in rows)
+               for k in ("stat_bytes", "wire_dense", "wire_ring",
+                         "wire_ring_fp8")}
+        ratio = (tot["wire_ring_fp8"] / tot["wire_dense"]
+                 if tot["wire_dense"] else float("nan"))
+        name = path.split("/")[-1].removesuffix(".csv")
+        print(f"| {name} | {len(rows)} | {fmt_bytes(tot['stat_bytes'])} "
+              f"| {fmt_bytes(tot['wire_dense'])} "
+              f"| {fmt_bytes(tot['wire_ring'])} "
+              f"| {fmt_bytes(tot['wire_ring_fp8'])} | {ratio:.3f} |")
+    print()
+
+
 def main():
-    recs = [json.load(open(f))
-            for f in sorted(glob.glob("experiments/dryrun/*.json"))]
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        # still render the comm section (its CSV inputs are independent)
+        # before failing with the regen instructions
+        comm_volume_section()
+        sys.exit(
+            "make_report: no dry-run records in experiments/dryrun/ (the "
+            "directory is gitignored). Generate them first with\n"
+            "    PYTHONPATH=src python -m repro.launch.dryrun --all "
+            "--mesh both --out experiments/dryrun")
+    recs = [json.load(open(f)) for f in files]
     ok = [r for r in recs if r["status"] == "ok"]
     by = {(r["arch"], r["shape"], r["mesh"]): r for r in ok}
 
@@ -85,6 +134,9 @@ def main():
                 ratio = r2["collective_bytes"] / r1["collective_bytes"]
                 print(f"| {a} | {s} | {fmt_bytes(r1['collective_bytes'])} "
                       f"| {fmt_bytes(r2['collective_bytes'])} | {ratio:.2f}x |")
+
+    print()
+    comm_volume_section()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+"""Stage-3 communication subsystem (see :mod:`repro.comm.comm`)."""
+
+from repro.comm.comm import (CommConfig, FactorReducer, STRATEGIES,
+                             WIRE_DTYPES, make_comm_config,
+                             template_wire_bytes, wire_stat_bytes)
+
+__all__ = ["CommConfig", "FactorReducer", "STRATEGIES", "WIRE_DTYPES",
+           "make_comm_config", "template_wire_bytes", "wire_stat_bytes"]

@@ -1,0 +1,349 @@
+"""Stage-3 communication subsystem: pluggable factor reduce strategies.
+
+The paper's scalability argument (Alg. 3, §5.2) hangs on Stage 3 being ONE
+ReduceScatterV per factor family per refresh. This module single-sources
+everything about that collective that used to be welded into
+``launch/train.py``: which mesh axes a statistic scatters over, the
+``PartitionSpec`` the shard_map out_specs must mirror, the wire payload
+layout, and the reduce implementation itself.
+
+Strategies
+----------
+``dense``
+    ``jax.lax.psum_scatter(v, axes, scatter_dimension=0, tiled=True)`` on the
+    raw f32 blocked array — bit-compatible with the pre-refactor behaviour
+    and the default everywhere.
+``ring``
+    ppermute-based ring reduce-scatter. Symmetric blocked factors sym-pack
+    their trailing ``(b, b)`` axes to ``t = b(b+1)/2`` rows *before* the ring
+    (paper §5.2), so the wire moves the triangle only — ~0.5x the dense wire
+    volume; non-symmetric statistics ride the ring as dense f32 rows. Same
+    summation order per chunk as a hardware ring, so results match ``dense``
+    to f32 reduction-reorder noise (not bit-identical).
+``ring_fp8``
+    The ``ring`` schedule with fp8 wire payloads for the symmetric factors:
+    each hop's partial sum quantizes per block (one scale per packed row,
+    via the ``ring_hop_pack``/``ring_hop_unpack`` dispatch ops reusing
+    :mod:`repro.kernels.quant_pack`), travels as fp8 payload + f32 scale,
+    and dequantizes to f32 on arrival before the local chunk is added — f32
+    accumulation at every hop, so quantization error grows linearly in the
+    hop count (p-1 hops x <= amax/28 for e4m3) instead of compounding.
+    Non-symmetric statistics (diag / unit-wise — a rounding-sensitive,
+    byte-wise negligible minority) stay on the f32 ring.
+
+Replication fallback
+--------------------
+A statistic whose leading dim is not divisible by any data-axis subset
+cannot scatter and falls back to a plain ``psum`` (full replication). That
+used to happen silently; the reducer now records the tally at construction
+time (the decision is static — pure shape arithmetic), logs it once, and
+hands it to :meth:`repro.core.stale.IntervalController.record_comm` so
+``summary()`` exposes it.
+
+The byte ledger convention: ``wire_stat_bytes`` counts the logical payload
+one full reduction moves per device (the same convention as the storage
+ledger) — the ring's (p-1)/p send factor applies equally to XLA's own
+reduce-scatter implementation and is deliberately left out.
+
+The planned fused SYRK-epilogue remote-DMA ring kernel (ROADMAP) registers
+as a fourth strategy here: it replaces :meth:`FactorReducer._ring` with a
+kernel that DMAs hop payloads peer-to-peer out of the factor-sum epilogue,
+and nothing in ``launch/train.py`` changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logger = logging.getLogger(__name__)
+
+STRATEGIES = ("dense", "ring", "ring_fp8")
+WIRE_DTYPES = ("f32", "fp8_e4m3", "fp8_e5m2")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Stage-3 collective configuration (one per training run)."""
+    strategy: str = "dense"       # "dense" | "ring" | "ring_fp8"
+    wire_dtype: str = "f32"       # "f32" | "fp8_e4m3" | "fp8_e5m2"
+    fp8_scale_mode: str = "fp32"  # per-block scale mode for fp8 hops
+    backend: Optional[str] = None  # kernel backend for hop pack/unpack
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"unknown comm strategy {self.strategy!r}; "
+                             f"expected {STRATEGIES}")
+        if self.wire_dtype not in WIRE_DTYPES:
+            raise ValueError(f"unknown wire dtype {self.wire_dtype!r}; "
+                             f"expected {WIRE_DTYPES}")
+        if self.strategy == "ring_fp8" and self.wire_dtype == "f32":
+            raise ValueError("ring_fp8 needs an fp8 wire_dtype "
+                             "(fp8_e4m3 | fp8_e5m2); use make_comm_config "
+                             "to get the e4m3 default")
+        if self.strategy in ("dense", "ring") and self.wire_dtype != "f32":
+            raise ValueError(f"strategy {self.strategy!r} moves f32 on the "
+                             f"wire; --wire-dtype {self.wire_dtype} only "
+                             "applies to ring_fp8")
+
+    @property
+    def wire_fmt(self) -> Optional[str]:
+        """fp8 format key for the hop codec ("e4m3"/"e5m2"), None for f32."""
+        if self.wire_dtype.startswith("fp8_"):
+            return self.wire_dtype[4:]
+        return None
+
+
+def make_comm_config(strategy: str, wire_dtype: Optional[str] = None,
+                     fp8_scale_mode: str = "fp32",
+                     backend: Optional[str] = None) -> CommConfig:
+    """CLI-facing constructor: fills the per-strategy default wire dtype
+    (f32 for dense/ring, e4m3 for ring_fp8) when ``wire_dtype`` is None."""
+    if wire_dtype is None:
+        wire_dtype = "fp8_e4m3" if strategy == "ring_fp8" else "f32"
+    return CommConfig(strategy=strategy, wire_dtype=wire_dtype,
+                      fp8_scale_mode=fp8_scale_mode, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Wire-volume accounting (the IntervalController's wire-bytes column)
+# ---------------------------------------------------------------------------
+
+def template_wire_bytes(template: dict, sym_fn: Callable[[str, str], bool],
+                        cfg: CommConfig,
+                        scattered_fn: Optional[Callable] = None
+                        ) -> dict[str, int]:
+    """Per-statistic wire bytes for a whole ``fstats`` template — the ONE
+    walk behind both ``SPNGD.wire_bytes`` (mesh-less: assumes the paper's
+    everything-scatters layout) and ``FactorReducer.wire_bytes_per_stat``
+    (prices this mesh's replication fallbacks at dense f32 via
+    ``scattered_fn(name) -> bool``)."""
+    out = {}
+    for fam, stats in template.items():
+        for key, leaf in stats.items():
+            name = f"{fam}.{key}"
+            scattered = scattered_fn(name) if scattered_fn else True
+            out[name] = wire_stat_bytes(leaf.shape, sym_fn(fam, key), cfg,
+                                        scattered=scattered)
+    return out
+
+
+def wire_stat_bytes(shape: tuple, symmetric: bool, cfg: CommConfig,
+                    scattered: bool = True) -> int:
+    """Bytes one full Stage-3 reduction of this statistic moves per device.
+
+    ``dense`` (and any replication fallback) moves the raw blocked f32
+    array; ``ring`` moves the sym-packed f32 triangle for symmetric factors;
+    ``ring_fp8`` moves fp8 payload + one f32 scale per packed row. The
+    ring's (p-1)/p factor is deliberately not applied (see module docs)."""
+    from repro import quant
+    from repro.core.stale import sym_packed_bytes
+    dense = int(np.prod(shape, dtype=np.int64)) * 4
+    sym = symmetric and len(shape) >= 2 and shape[-1] == shape[-2]
+    if cfg.strategy == "dense" or not scattered or not sym:
+        return dense
+    if cfg.strategy == "ring":
+        return sym_packed_bytes(shape, dtype_bytes=4)
+    # ring_fp8 wire tile == the fp8 storage tile: one accounting formula
+    return quant.encoded_nbytes(shape, symmetric=True)
+
+
+# ---------------------------------------------------------------------------
+# The reducer
+# ---------------------------------------------------------------------------
+
+class FactorReducer:
+    """Owns every Stage-3 decision for one (mesh, manual_axes, CommConfig).
+
+    Construction is host-side and eager: the scatter decision per statistic
+    is pure shape arithmetic over the ``fstats`` template, so the
+    replication tally, the shard_map out_specs and the wire-byte ledger all
+    exist before anything traces. The traced entry points
+    (:meth:`reduce`, :meth:`reduce_stat`, :meth:`psum`) are called INSIDE
+    the shard_map region.
+    """
+
+    def __init__(self, mesh, *, manual_axes: str = "auto",
+                 comm: Optional[CommConfig] = None,
+                 template: Optional[dict] = None,
+                 sym_fn: Optional[Callable[[str, str], bool]] = None):
+        self.mesh = mesh
+        self.comm = comm or CommConfig()
+        # "all": the paper's pure-DP replica layout — every mesh axis is
+        # manual and factors scatter over all of them. "auto"/"dp": only
+        # the data axes are manual; the model axis stays GSPMD (TP).
+        if manual_axes == "all":
+            self.dp = tuple(mesh.axis_names)
+        else:
+            self.dp = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names)
+        self.ndev = 1
+        for a in self.dp:
+            self.ndev *= mesh.shape[a]
+        self.sym_fn = sym_fn or (lambda fam, key: False)
+        self.template = template
+        self._decisions: dict[str, tuple] = {}
+        self.replicated: list[str] = []
+        if template is not None:
+            for fam, stats in template.items():
+                for key, leaf in stats.items():
+                    axes = (self.scatter_axes(leaf.shape[0])
+                            if len(leaf.shape) else ())
+                    self._decisions[f"{fam}.{key}"] = axes
+                    if len(leaf.shape) and not axes:
+                        self.replicated.append(f"{fam}.{key}")
+            if self.replicated and self.ndev > 1:
+                logger.warning(
+                    "Stage-3: %d/%d statistics cannot scatter over %s "
+                    "(leading dim not divisible) and fall back to fully "
+                    "replicated psum: %s", len(self.replicated),
+                    len(self._decisions), self.dp,
+                    ", ".join(sorted(self.replicated)))
+
+    # ---- decisions (host-side, shape-static) ----
+
+    def scatter_axes(self, dim: int) -> tuple:
+        """Largest subset of the data axes whose size divides ``dim`` —
+        the single source of the scatter decision (previously triplicated
+        across reduce_stat / _scatter_axes / _raw_specs in train.py)."""
+        full = 1
+        for a in self.dp:
+            full *= self.mesh.shape[a]
+        if full and dim % full == 0 and dim >= full:
+            return self.dp
+        if "data" in self.dp and dim % self.mesh.shape["data"] == 0 \
+                and dim >= self.mesh.shape["data"]:
+            return ("data",)
+        return ()
+
+    def out_spec(self, shape: tuple):
+        """shard_map out-spec mirroring the scatter decision for ``shape``."""
+        from jax.sharding import PartitionSpec as P
+        axes = self.scatter_axes(shape[0]) if len(shape) else ()
+        return (P(axes, *(None,) * (len(shape) - 1)) if axes else P())
+
+    def out_specs(self):
+        """Out-spec tree for the whole ``fstats`` template."""
+        if self.template is None:
+            raise ValueError("FactorReducer needs a template for out_specs")
+        return {fam: {k: self.out_spec(leaf.shape)
+                      for k, leaf in stats.items()}
+                for fam, stats in self.template.items()}
+
+    def scatter_report(self) -> dict:
+        """Host-side tally for IntervalController.record_comm / logging."""
+        return {
+            "strategy": self.comm.strategy,
+            "wire_dtype": self.comm.wire_dtype,
+            "dp_axes": list(self.dp),
+            "n_stats": len(self._decisions),
+            "n_replicated": len(self.replicated),
+            "replicated_stats": sorted(self.replicated),
+        }
+
+    def wire_bytes_per_stat(self) -> dict[str, int]:
+        """Per-refresh wire bytes of each statistic under this reducer's
+        ACTUAL decisions (replication fallbacks cost the full dense f32)."""
+        if self.template is None:
+            raise ValueError("FactorReducer needs a template for wire bytes")
+        return template_wire_bytes(
+            self.template, self.sym_fn, self.comm,
+            scattered_fn=lambda name: bool(self._decisions.get(name)))
+
+    # ---- traced entry points (call inside the shard_map region) ----
+
+    def psum(self, x):
+        """Plain all-reduce over the data axes (gradients / loss)."""
+        return jax.lax.psum(x, self.dp)
+
+    def reduce_stat(self, fam: str, key: str, v: jax.Array) -> jax.Array:
+        """One statistic's Stage-3 reduce: scatter when divisible (strategy
+        applies), fully-replicated psum otherwise."""
+        axes = self.scatter_axes(v.shape[0]) if v.ndim >= 1 else ()
+        if not axes:
+            return jax.lax.psum(v, self.dp)
+        if self.comm.strategy == "dense":
+            v = jax.lax.psum_scatter(v, axes, scatter_dimension=0,
+                                     tiled=True)
+        else:
+            v = self._ring(v, axes, symmetric=self.sym_fn(fam, key))
+        rest = tuple(a for a in self.dp if a not in axes)
+        if rest:
+            v = jax.lax.psum(v, rest)
+        return v
+
+    def reduce(self, raw: dict) -> dict:
+        """Reduce a whole raw-statistics tree ({family: {key: array}})."""
+        return {fam: {k: self.reduce_stat(fam, k, v)
+                      for k, v in stats.items()}
+                for fam, stats in raw.items()}
+
+    # ---- the ring ----
+
+    def _ring(self, v: jax.Array, axes: tuple, *,
+              symmetric: bool) -> jax.Array:
+        """Ring reduce-scatter of ``v`` along dim 0 over the (possibly
+        multi-axis) device group ``axes``; chunk assignment matches
+        ``psum_scatter(..., tiled=True)`` so out_specs are shared with the
+        dense strategy."""
+        from repro.core import kfac
+        p = 1
+        for a in axes:
+            p *= self.mesh.shape[a]
+        sym = symmetric and v.ndim >= 3 and v.shape[-1] == v.shape[-2]
+        b = v.shape[-1] if sym else 0
+        if sym:
+            v = kfac.sym_pack(v.astype(jnp.float32))   # wire = triangle only
+        else:
+            v = v.astype(jnp.float32)
+        if p > 1:
+            v = _ring_reduce_scatter(
+                v, axes if len(axes) > 1 else axes[0], p,
+                fmt=self.comm.wire_fmt if sym else None,
+                scale_mode=self.comm.fp8_scale_mode,
+                backend=self.comm.backend)
+        return kfac.sym_unpack(v, b) if sym else v
+
+
+def _ring_reduce_scatter(v: jax.Array, axis_name, p: int, *,
+                         fmt: Optional[str], scale_mode: str,
+                         backend: Optional[str]) -> jax.Array:
+    """p-1-hop ring reduce-scatter along dim 0 (divisible by ``p``).
+
+    Device with group index ``i`` ends holding chunk ``i`` fully reduced
+    (the ``tiled=True`` psum_scatter layout). With ``fmt`` set, every hop's
+    partial sum travels as fp8 payload + per-row f32 scale (the
+    ring_hop_pack/unpack dispatch ops); the accumulator itself stays f32,
+    so quantization error is one rounding per hop, not compounding.
+    """
+    from repro.kernels import dispatch
+    d = v.shape[0]
+    c = d // p
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(j, (j + 1) % p) for j in range(p)]
+
+    def chunk(k):
+        return jax.lax.dynamic_slice_in_dim(v, k * c, c, axis=0)
+
+    def body(s, acc):
+        if fmt is not None:
+            payload, scale = dispatch.ring_hop_pack(
+                acc, fmt=fmt, scale_mode=scale_mode, backend=backend)
+            payload = jax.lax.ppermute(payload, axis_name, perm)
+            scale = jax.lax.ppermute(scale, axis_name, perm)
+            acc = dispatch.ring_hop_unpack(payload, scale, backend=backend)
+        else:
+            acc = jax.lax.ppermute(acc, axis_name, perm)
+        # chunk received at the end of step s is (idx - 2 - s) mod p; the
+        # local contribution joins in f32
+        return acc + chunk(jnp.mod(idx + 2 * p - 2 - s, p))
+
+    # each device seeds the ring with its local chunk (idx - 1) mod p; after
+    # p-1 hops that chunk has visited every device and landed on its owner
+    acc = chunk(jnp.mod(idx + p - 1, p))
+    return jax.lax.fori_loop(0, p - 1, body, acc)

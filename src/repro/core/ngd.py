@@ -94,13 +94,18 @@ class SPNGD:
         from repro.quant import parse_factor_dtype
         self._fp8 = parse_factor_dtype(cfg.factor_dtype)  # fmt key or None
 
-    def _sym_stat(self, fam: str, key: str) -> bool:
-        """Whether a stat is a symmetric blocked factor (sym-packable)."""
+    def sym_stat(self, fam: str, key: str) -> bool:
+        """Whether a stat is a symmetric blocked factor (sym-packable) —
+        shared by the fp8 history codec and the Stage-3 reducer
+        (:class:`repro.comm.FactorReducer`), so packing decisions cannot
+        drift between storage and wire."""
         if key in ("a", "g"):
             info = self.infos[fam]
             kind = info.spec.a_kind if key == "a" else info.spec.g_kind
             return kind == "full"
         return key == "uwf"                  # full BN Fisher is symmetric
+
+    _sym_stat = sym_stat                     # pre-PR-5 spelling
 
     # ---- fp8 history codec (dequantize-on-read; repro.quant) ----
 
@@ -109,7 +114,7 @@ class SPNGD:
             return x.astype(self.cfg.factor_dtype)
         from repro import quant
         return quant.encode_stat(x, self._fp8,
-                                 symmetric=self._sym_stat(fam, key),
+                                 symmetric=self.sym_stat(fam, key),
                                  scale_mode=self.cfg.fp8_scale_mode,
                                  backend=self.cfg.backend)
 
@@ -118,7 +123,7 @@ class SPNGD:
             return stored.astype(jnp.float32)
         from repro import quant
         return quant.decode_stat(stored, shape,
-                                 symmetric=self._sym_stat(fam, key),
+                                 symmetric=self.sym_stat(fam, key),
                                  backend=self.cfg.backend)
 
     # ---- statistic naming for the interval controller ----
@@ -150,8 +155,23 @@ class SPNGD:
                 else:
                     out[f"{fam}.{key}"] = stat_payload_bytes(
                         leaf.shape, self.cfg.factor_dtype,
-                        symmetric=self._sym_stat(fam, key))
+                        symmetric=self.sym_stat(fam, key))
         return out
+
+    def wire_bytes(self, comm=None) -> dict[str, int]:
+        """Per-statistic Stage-3 collective payload under a
+        :class:`repro.comm.CommConfig` — the wire-bytes column of the
+        IntervalController ledger. Unlike :meth:`stat_bytes` (storage dtype)
+        this reflects what the configured collective actually moves: dense
+        f32 for ``dense``, sym-packed f32 for ``ring``, fp8 payload +
+        per-block scales for ``ring_fp8``. Assumes the paper's layout where
+        every statistic scatters; a mesh-specific reducer's
+        ``wire_bytes_per_stat()`` additionally prices replication
+        fallbacks at dense f32."""
+        from repro import comm as comm_mod
+        return comm_mod.template_wire_bytes(
+            jax.eval_shape(self.fstats_fn), self.sym_stat,
+            comm or comm_mod.CommConfig())
 
     # ---- state ----
 

@@ -40,7 +40,9 @@ class StatState:
     t_next: int = 1          # Algorithm 1: t_X <- 1 initially
     delta: int = 1
     delta_m1: int = 1
-    bytes_per_refresh: int = 0   # symmetric-packed reduce-scatter payload
+    bytes_per_refresh: int = 0   # symmetric-packed storage payload
+    wire_bytes_per_refresh: int = 0  # Stage-3 collective payload (the
+                                     # actual wire dtype; repro.comm)
     refresh_count: int = 0
 
 
@@ -49,15 +51,22 @@ class IntervalController:
 
     def __init__(self, stat_names: list[str], alpha: float = 0.1,
                  max_interval: int = 0,
-                 bytes_per_stat: Optional[dict[str, int]] = None):
+                 bytes_per_stat: Optional[dict[str, int]] = None,
+                 wire_bytes_per_stat: Optional[dict[str, int]] = None):
         self.alpha = alpha
         self.max_interval = max_interval          # 0 = unbounded (paper)
         self.stats = {n: StatState() for n in stat_names}
         if bytes_per_stat:
             for n, b in bytes_per_stat.items():
                 self.stats[n].bytes_per_refresh = b
+        if wire_bytes_per_stat:
+            for n, b in wire_bytes_per_stat.items():
+                self.stats[n].wire_bytes_per_refresh = b
         self.total_bytes = 0
         self.dense_bytes = 0                      # what refresh-every-step would cost
+        self.total_wire_bytes = 0
+        self.dense_wire_bytes = 0
+        self.comm_info: dict = {}                 # reducer tally (record_comm)
         self.steps = 0
 
     def flags(self, t: int) -> dict[str, bool]:
@@ -74,6 +83,7 @@ class IntervalController:
         self.steps += 1
         for name, st in self.stats.items():
             self.dense_bytes += st.bytes_per_refresh
+            self.dense_wire_bytes += st.wire_bytes_per_refresh
             if not flags.get(name, False):
                 continue
             d1, d2 = sims[name]
@@ -93,6 +103,15 @@ class IntervalController:
             st.t_next = t + delta
             st.refresh_count += 1
             self.total_bytes += st.bytes_per_refresh
+            self.total_wire_bytes += st.wire_bytes_per_refresh
+
+    # ---- Stage-3 comm bookkeeping (repro.comm reducer tally) ----
+
+    def record_comm(self, info: dict) -> None:
+        """Attach the reducer's scatter report (strategy, wire dtype,
+        replication-fallback tally — ``FactorReducer.scatter_report()``) so
+        :meth:`summary` surfaces which statistics never scattered."""
+        self.comm_info.update(info)
 
     # ---- checkpoint continuity (Algorithm 1's intervals assume it) ----
 
@@ -104,6 +123,9 @@ class IntervalController:
             "steps": self.steps,
             "total_bytes": self.total_bytes,
             "dense_bytes": self.dense_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+            "dense_wire_bytes": self.dense_wire_bytes,
+            "comm_info": dict(self.comm_info),
             "stats": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
 
@@ -114,6 +136,10 @@ class IntervalController:
         ctrl.steps = state["steps"]
         ctrl.total_bytes = state["total_bytes"]
         ctrl.dense_bytes = state["dense_bytes"]
+        # pre-PR-5 checkpoints have no wire ledger: resume at zero
+        ctrl.total_wire_bytes = state.get("total_wire_bytes", 0)
+        ctrl.dense_wire_bytes = state.get("dense_wire_bytes", 0)
+        ctrl.comm_info = dict(state.get("comm_info", {}))
         for n, s in state["stats"].items():
             ctrl.stats[n] = StatState(**s)
         return ctrl
@@ -127,11 +153,19 @@ class IntervalController:
         return self.total_bytes / self.dense_bytes
 
     def summary(self) -> dict:
+        wire_rate = (self.total_wire_bytes / self.dense_wire_bytes
+                     if self.dense_wire_bytes else 1.0)
         return {
             "steps": self.steps,
             "total_stat_bytes": self.total_bytes,
             "dense_stat_bytes": self.dense_bytes,
             "reduction_rate": self.reduction_rate(),
+            "comm": {
+                "total_wire_bytes": self.total_wire_bytes,
+                "dense_wire_bytes": self.dense_wire_bytes,
+                "wire_reduction_rate": wire_rate,
+                **self.comm_info,
+            },
             "per_stat": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
 

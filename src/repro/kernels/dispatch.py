@@ -336,6 +336,49 @@ def fp8_unpack(payload: jax.Array, scale: jax.Array, b: int, *,
 
 
 # ---------------------------------------------------------------------------
+# ring_hop_pack / ring_hop_unpack: per-hop fp8 wire codec for the Stage-3
+# ring reduce-scatter (repro.comm). Unlike fp8_pack/fp8_unpack these take
+# rows that are ALREADY sym-packed (the hop payload is a chunk of packed
+# triangles): (..., t) f32 <-> (payload fp8 (..., t), scale f32 (...,)),
+# one scale per row — the quantization tile stays the §5.2 block tile, so
+# the wire format matches the fp8 storage format bit for bit.
+# ---------------------------------------------------------------------------
+
+def _ring_hop_pack_ref(rows, fmt: str, scale_mode: str):
+    from repro.quant import quant
+    return quant.quantize_rows(rows, fmt, scale_mode)
+
+
+def _ring_hop_pack_pallas(rows, fmt: str, scale_mode: str):
+    from repro.kernels import ops
+    return ops.fp8_quant_rows(rows, fmt=fmt, scale_mode=scale_mode)
+
+
+def ring_hop_pack(rows: jax.Array, *, fmt: str = "e4m3",
+                  scale_mode: str = "fp32", backend: str | None = None):
+    """Quantize one ring hop's partial-sum rows to the fp8 wire format."""
+    which = resolve(backend, rows.shape[-1])
+    return lookup("ring_hop_pack", which)(rows, fmt, scale_mode)
+
+
+def _ring_hop_unpack_ref(payload, scale):
+    from repro.quant import quant
+    return quant.dequantize_rows(payload, scale)
+
+
+def _ring_hop_unpack_pallas(payload, scale):
+    from repro.kernels import ops
+    return ops.fp8_dequant_rows(payload, scale)
+
+
+def ring_hop_unpack(payload: jax.Array, scale: jax.Array, *,
+                    backend: str | None = None) -> jax.Array:
+    """Dequantize a received hop payload back to the f32 accumulator."""
+    which = resolve(backend, payload.shape[-1])
+    return lookup("ring_hop_unpack", which)(payload, scale)
+
+
+# ---------------------------------------------------------------------------
 # swa_attention: causal sliding-window attention, (BH, S, hd) layout
 # ---------------------------------------------------------------------------
 
@@ -431,6 +474,10 @@ register("fp8_pack", "ref", _fp8_pack_ref)
 register("fp8_pack", "pallas", _fp8_pack_pallas)
 register("fp8_unpack", "ref", _fp8_unpack_ref)
 register("fp8_unpack", "pallas", _fp8_unpack_pallas)
+register("ring_hop_pack", "ref", _ring_hop_pack_ref)
+register("ring_hop_pack", "pallas", _ring_hop_pack_pallas)
+register("ring_hop_unpack", "ref", _ring_hop_unpack_ref)
+register("ring_hop_unpack", "pallas", _ring_hop_unpack_pallas)
 register("swa_attention", "ref", _swa_ref)
 register("swa_attention", "pallas", _swa_pallas)
 register("swa_attention_fwd_res", "ref", _swa_fwd_res_ref)

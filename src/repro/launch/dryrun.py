@@ -88,7 +88,8 @@ def build_case(arch: str, shape_name: str, mesh, *,
                schedule: str = "auto", tp_align: bool = False,
                rwkv_chunk: int = 0, fast: bool = False,
                backend: str = "auto", factor_dtype: str = "f32",
-               inverse_method: str = "eigh"):
+               inverse_method: str = "eigh", comm_strategy: str = "dense",
+               wire_dtype: Optional[str] = None):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
@@ -101,7 +102,11 @@ def build_case(arch: str, shape_name: str, mesh, *,
     dry-run's memory_analysis sees the compressed optimizer state).
     inverse_method: Stage-4 inversion ("eigh" | "cholesky" |
     "newton_schulz" — the matmul-only iteration the dry-run's cost_analysis
-    then counts as GEMM FLOPs instead of an opaque eigendecomposition)."""
+    then counts as GEMM FLOPs instead of an opaque eigendecomposition).
+    comm_strategy/wire_dtype: Stage-3 factor reduce under the shardmap
+    schedule (repro.comm) — the ring strategies swap the psum_scatter for
+    ppermute hops, visible in the dry-run's collective-permute byte
+    column."""
     cfg = effective_config(arch, shape_name)
     if backend != "auto":
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -162,16 +167,21 @@ def build_case(arch: str, shape_name: str, mesh, *,
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
+            from repro.comm import make_comm_config
+            comm = make_comm_config(comm_strategy, wire_dtype,
+                                    backend=cfg.backend)
             if sm_manual == "all":
                 accum = max(1, shape.global_batch
                             // len(mesh.devices.flatten()))
             if fast:
                 step = make_shardmap_fast_step(model, opt, mesh, accum=accum,
-                                               manual_axes=sm_manual)
+                                               manual_axes=sm_manual,
+                                               comm=comm)
             else:
                 step = make_shardmap_train_step(model, opt, mesh,
                                                 accum=accum,
-                                                manual_axes=sm_manual)
+                                                manual_axes=sm_manual,
+                                                comm=comm)
         elif fast:
             step = make_fast_step(model, opt, accum=accum)
         else:
@@ -226,7 +236,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
              tp_align: bool = False, rwkv_chunk: int = 0,
              fast: bool = False, backend: str = "auto",
              factor_dtype: str = "f32",
-             inverse_method: str = "eigh") -> dict:
+             inverse_method: str = "eigh", comm_strategy: str = "dense",
+             wire_dtype: Optional[str] = None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
@@ -234,13 +245,21 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
     rec = {"arch": arch, "shape": shape_name, "schedule": schedule,
            "tp_align": tp_align, "backend": backend,
            "factor_dtype": factor_dtype, "inverse_method": inverse_method,
+           "comm_strategy": comm_strategy,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
         with compat.set_mesh(mesh):
             step, args, n_params, label = build_case(
                 arch, shape_name, mesh, schedule=schedule, tp_align=tp_align,
                 rwkv_chunk=rwkv_chunk, fast=fast, backend=backend,
-                factor_dtype=factor_dtype, inverse_method=inverse_method)
+                factor_dtype=factor_dtype, inverse_method=inverse_method,
+                comm_strategy=comm_strategy, wire_dtype=wire_dtype)
+            reducer = getattr(step, "reducer", None)
+            if reducer is not None:
+                rec["comm"] = reducer.scatter_report()
+                if reducer.template is not None:
+                    rec["comm"]["wire_bytes_per_refresh"] = sum(
+                        reducer.wire_bytes_per_stat().values())
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
@@ -340,11 +359,25 @@ def main():
                          "matmul-only blocked iteration (MXU-resident under "
                          "--backend pallas, eigh fallback for blocks that "
                          "fail to contract)")
+    from repro.comm import STRATEGIES, WIRE_DTYPES
+    ap.add_argument("--comm-strategy", default="dense", choices=STRATEGIES,
+                    help="Stage-3 factor reduce under --schedule shardmap "
+                         "(repro.comm): dense psum_scatter, ring "
+                         "reduce-scatter over sym-packed triangles, or "
+                         "ring_fp8 fp8-wire hops")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=sorted(WIRE_DTYPES),
+                    help="collective wire dtype; defaults to f32 for "
+                         "dense/ring, fp8_e4m3 for ring_fp8")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
                     help="Algorithm 1 no-refresh steady-state step")
     args = ap.parse_args()
+    if args.comm_strategy != "dense" and args.schedule != "shardmap":
+        # the GSPMD-auto schedule has no explicit Stage-3 collective; a
+        # record tagged ring/ring_fp8 that actually measured GSPMD would lie
+        ap.error("--comm-strategy requires --schedule shardmap")
 
     archs = LM_ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
@@ -360,6 +393,10 @@ def main():
         variant += f"__{args.factor_dtype}"
     if args.inverse_method != "eigh":
         variant += f"__{args.inverse_method}"
+    if args.comm_strategy != "dense":
+        variant += f"__{args.comm_strategy}"
+        if args.wire_dtype:
+            variant += f"__{args.wire_dtype}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -382,7 +419,9 @@ def main():
                                rwkv_chunk=args.rwkv_chunk, fast=args.fast,
                                backend=args.backend,
                                factor_dtype=args.factor_dtype,
-                               inverse_method=args.inverse_method)
+                               inverse_method=args.inverse_method,
+                               comm_strategy=args.comm_strategy,
+                               wire_dtype=args.wire_dtype)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -90,7 +90,8 @@ def make_fast_step(model, opt: SPNGD, accum: int = 1) -> Callable:
 
 def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
                              counts_fn=None,
-                             manual_axes: str = "auto") -> Callable:
+                             manual_axes: str = "auto",
+                             comm=None) -> Callable:
     """The paper's Algorithm 3 with EXPLICIT collectives (shard_map over the
     data axes; the model/TP axis stays compiler-managed):
 
@@ -99,9 +100,14 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
                  cross-device traffic (GSPMD-auto inserts per-layer
                  all-reduces inside the backward scan; doing it manually
                  defers everything to one sync point).
-      Stage 3:   one ``psum`` for the gradients + one ``psum_scatter`` per
+      Stage 3:   one ``psum`` for the gradients + one reduce-scatter per
                  factor family, scattering the layer axis across the data
-                 axes — the ReduceScatterV of the paper.
+                 axes — the ReduceScatterV of the paper. The collective is
+                 owned by :class:`repro.comm.FactorReducer`; ``comm``
+                 (a :class:`repro.comm.CommConfig`) selects the strategy:
+                 dense psum_scatter (default, bit-compatible), ring
+                 reduce-scatter over sym-packed triangles, or the fp8-wire
+                 ring.
       Stage 4:   inversion + preconditioning run on layer-sharded factors
                  (the sharding hook keeps them scattered).
       Stage 5:   the updated weights' all-gather is GSPMD's job (weights are
@@ -110,29 +116,11 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
     """
     from jax.sharding import PartitionSpec as P
 
-    # "all": every mesh axis is manual and the batch shards over all of them
-    # — the paper's pure data-parallel replica layout (weights replicated,
-    # factors scattered over every device; no tensor parallelism). "auto"/
-    # "dp": only the data axes are manual; the model axis stays GSPMD (TP).
-    if manual_axes == "all":
-        dp = tuple(mesh.axis_names)
-    else:
-        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ndev = 1
-    for a in dp:
-        ndev *= mesh.shape[a]
-
-    def _scatter_axes(dim: int):
-        """Largest subset of dp whose size divides the leading dim."""
-        full = 1
-        for a in dp:
-            full *= mesh.shape[a]
-        if dim % full == 0 and dim >= full:
-            return dp
-        if "data" in dp and dim % mesh.shape["data"] == 0 \
-                and dim >= mesh.shape["data"]:
-            return ("data",)
-        return ()
+    from repro.comm import FactorReducer
+    reducer = FactorReducer(mesh, manual_axes=manual_axes, comm=comm,
+                            template=jax.eval_shape(opt.fstats_fn),
+                            sym_fn=opt.sym_stat)
+    dp, ndev = reducer.dp, reducer.ndev
 
     def inner(params, batch):
         if accum == 1:
@@ -158,40 +146,16 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
                 body, (zeros[0], zeros[1], jnp.zeros((), jnp.float32)), micro)
 
         # ---- Stage 3: explicit collectives, once per step ----
-        loss = jax.lax.psum(loss_sum, dp) / (ndev * accum)
-        grads = jax.tree.map(lambda g: jax.lax.psum(g, dp) / (ndev * accum),
+        loss = reducer.psum(loss_sum) / (ndev * accum)
+        grads = jax.tree.map(lambda g: reducer.psum(g) / (ndev * accum),
                              grads)
         g_scale = 1.0 / (accum * accum * ndev * ndev)
-
-        def reduce_stat(key, v):
-            if key != "a":
-                v = v * g_scale            # undo local-mean-loss scaling
-            axes = _scatter_axes(v.shape[0]) if v.ndim >= 1 else ()
-            if axes:
-                v = jax.lax.psum_scatter(v, axes, scatter_dimension=0,
-                                         tiled=True)
-                rest = tuple(a for a in dp if a not in axes)
-                if rest:
-                    v = jax.lax.psum(v, rest)
-            else:
-                v = jax.lax.psum(v, dp)
-            return v
-
-        raw_out = {fam: {k: reduce_stat(k, v) for k, v in stats.items()}
-                   for fam, stats in raw.items()}
-        return loss, grads, raw_out
-
-    # out_specs mirror the scatter decisions
-    def _raw_specs():
-        template = jax.eval_shape(opt.fstats_fn)
-        specs = {}
-        for fam, stats in template.items():
-            specs[fam] = {}
-            for k, leaf in stats.items():
-                axes = _scatter_axes(leaf.shape[0]) if len(leaf.shape) else ()
-                specs[fam][k] = (P(axes, *(None,) * (len(leaf.shape) - 1))
-                                 if axes else P())
-        return specs
+        # undo local-mean-loss scaling BEFORE the reduce (the fp8 wire
+        # quantizes what actually travels)
+        raw = {fam: {k: (v if k == "a" else v * g_scale)
+                     for k, v in stats.items()}
+               for fam, stats in raw.items()}
+        return loss, grads, reducer.reduce(raw)
 
     def train_step(params, opt_state, batch, flags, lam, lr, mom):
         counts = model.site_counts(batch)
@@ -200,30 +164,29 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
         sm = compat.shard_map(
             inner, mesh=mesh,
             in_specs=(P(), batch_specs),
-            out_specs=(P(), P(), _raw_specs()),
+            out_specs=(P(), P(), reducer.out_specs()),
             axis_names=set(dp))
         loss, grads, raw = sm(params, batch)
         return opt.apply_update(params, opt_state, grads, raw, counts,
                                 flags, lam, lr, mom, loss, {})
 
+    train_step.reducer = reducer     # launch layer: ledger + tally access
     return train_step
 
 
 def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
-                            manual_axes: str = "auto") -> Callable:
+                            manual_axes: str = "auto",
+                            comm=None) -> Callable:
     """Algorithm 1 fast path under the explicit schedule: no statistic
     refreshes this step — backward + ONE gradient psum + stale-preconditioned
     update. This is the steady-state step whose cost the paper drives down to
-    ~SGD."""
+    ~SGD. The reducer owns the collective axes here too (no factor traffic,
+    so the strategy only picks which axes the gradient psum runs over)."""
     from jax.sharding import PartitionSpec as P
 
-    if manual_axes == "all":
-        dp = tuple(mesh.axis_names)
-    else:
-        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ndev = 1
-    for a in dp:
-        ndev *= mesh.shape[a]
+    from repro.comm import FactorReducer
+    reducer = FactorReducer(mesh, manual_axes=manual_axes, comm=comm)
+    dp, ndev = reducer.dp, reducer.ndev
 
     def inner(params, batch):
         if accum == 1:
@@ -244,8 +207,8 @@ def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
             zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), params)
             (grads, loss_sum), _ = jax.lax.scan(
                 body, (zeros, jnp.zeros((), jnp.float32)), micro)
-        loss = jax.lax.psum(loss_sum, dp) / (ndev * accum)
-        grads = jax.tree.map(lambda g: jax.lax.psum(g, dp) / (ndev * accum),
+        loss = reducer.psum(loss_sum) / (ndev * accum)
+        grads = jax.tree.map(lambda g: reducer.psum(g) / (ndev * accum),
                              grads)
         return loss, grads
 
@@ -258,6 +221,7 @@ def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
         return opt._finish(params, opt_state, grads, opt_state["curv"],
                            lam, lr, mom, loss, {}, {})
 
+    fast_step.reducer = reducer
     return fast_step
 
 
@@ -317,6 +281,22 @@ def main():
                          "(eigh/cholesky) or the matmul-only Newton-Schulz "
                          "iteration (Pallas kernel under --backend pallas; "
                          "blocks that fail to contract re-solve via eigh)")
+    from repro import comm as comm_lib
+    ap.add_argument("--comm-strategy", default="dense",
+                    choices=comm_lib.STRATEGIES,
+                    help="Stage-3 factor reduce strategy (repro.comm): "
+                         "dense psum_scatter (bit-compatible default), ring "
+                         "reduce-scatter over sym-packed triangles, or "
+                         "ring_fp8 (fp8 wire payloads + per-block scales, "
+                         "f32 accumulation per hop). This single-process "
+                         "CLI runs the jit schedule (no collectives) — the "
+                         "flag here MODELS the wire ledger; the collective "
+                         "itself runs under make_shardmap_train_step "
+                         "(repro.launch.dryrun --schedule shardmap)")
+    ap.add_argument("--wire-dtype", default=None,
+                    choices=sorted(comm_lib.WIRE_DTYPES),
+                    help="collective wire dtype; defaults to f32 for "
+                         "dense/ring and fp8_e4m3 for ring_fp8")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
@@ -340,8 +320,13 @@ def main():
                           inverse_method=args.inverse_method,
                           factor_dtype=FACTOR_DTYPES[args.factor_dtype]))
     state = opt.init(params)
+    comm_cfg = comm_lib.make_comm_config(args.comm_strategy, args.wire_dtype,
+                                         backend=args.backend)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
-                              bytes_per_stat=opt.stat_bytes())
+                              bytes_per_stat=opt.stat_bytes(),
+                              wire_bytes_per_stat=opt.wire_bytes(comm_cfg))
+    ctrl.record_comm({"strategy": comm_cfg.strategy,
+                      "wire_dtype": comm_cfg.wire_dtype})
     data = token_batches(cfg.vocab, args.batch, args.seq, seed=0)
     lr_fn = polynomial_decay(args.lr, 0, args.steps, 4.0)
     step_j = jax.jit(make_train_step(model, opt, accum=args.accum))
@@ -366,7 +351,11 @@ def main():
             print(f"step {t:4d} loss {float(m['loss']):.4f} lr {lr:.4f} "
                   f"refresh {sum(flags.values())}/{len(flags)}", flush=True)
     s = ctrl.summary()
-    print(f"statistic traffic: {100 * s['reduction_rate']:.1f}% of dense")
+    print(f"statistic traffic: {100 * s['reduction_rate']:.1f}% of dense; "
+          f"modelled wire [{comm_cfg.strategy}/{comm_cfg.wire_dtype}]: "
+          f"{s['comm']['total_wire_bytes']} B "
+          f"({100 * s['comm']['wire_reduction_rate']:.1f}% of "
+          f"refresh-every-step)")
 
 
 if __name__ == "__main__":

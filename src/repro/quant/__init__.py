@@ -1,8 +1,10 @@
 from repro.quant.quant import (FORMATS, FMT_MAX, FACTOR_DTYPES,
+                               PAYLOAD_BYTES, SCALE_BYTES,
                                parse_factor_dtype, compute_scale,
                                quantize_rows, dequantize_rows,
                                encode_stat, decode_stat, encoded_nbytes)
 
-__all__ = ["FORMATS", "FMT_MAX", "FACTOR_DTYPES", "parse_factor_dtype",
-           "compute_scale", "quantize_rows", "dequantize_rows",
+__all__ = ["FORMATS", "FMT_MAX", "FACTOR_DTYPES", "PAYLOAD_BYTES",
+           "SCALE_BYTES", "parse_factor_dtype", "compute_scale",
+           "quantize_rows", "dequantize_rows",
            "encode_stat", "decode_stat", "encoded_nbytes"]

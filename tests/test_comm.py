@@ -1,0 +1,343 @@
+"""Stage-3 comm subsystem (repro.comm): the ISSUE-5 acceptance criteria.
+
+  * CommConfig validation + per-strategy wire-dtype defaults;
+  * scatter decisions single-sourced in FactorReducer (indivisible leading
+    dims, single-device mesh, manual_axes "all" vs "auto");
+  * replication fallback is counted, logged, and surfaced through
+    IntervalController.summary();
+  * reduce parity on a multi-device CPU mesh: dense bit-identical to a raw
+    psum_scatter, ring within f32 reduction-reorder noise, ring_fp8 within
+    the per-hop quantization bound;
+  * ring_hop_pack/unpack dispatch ops bit-identical ref vs pallas;
+  * wire-byte accounting: ring_fp8 <= 0.3x dense f32, ledger column moves;
+  * 20-step e2e: --comm-strategy ring_fp8 loss-parity with dense f32 under
+    shard_map (the pinned tolerance of the acceptance criterion).
+"""
+import os
+
+import pytest
+
+if "PYTEST_XDIST" not in os.environ and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import (CommConfig, FactorReducer, STRATEGIES,
+                        make_comm_config, wire_stat_bytes)
+from repro.core.stale import IntervalController
+from repro.kernels import dispatch
+from repro.launch import compat
+
+needs_devices = pytest.mark.skipif(len(jax.devices()) < 8,
+                                   reason="needs 8 virtual devices")
+
+
+# ---------------------------------------------------------------------------
+# config + accounting (host-side, no devices needed)
+# ---------------------------------------------------------------------------
+
+def test_comm_config_validation():
+    assert CommConfig().strategy == "dense"
+    with pytest.raises(ValueError, match="strategy"):
+        CommConfig(strategy="tree")
+    with pytest.raises(ValueError, match="wire"):
+        CommConfig(wire_dtype="f16")
+    with pytest.raises(ValueError, match="fp8"):
+        CommConfig(strategy="ring_fp8")            # needs an fp8 wire dtype
+    with pytest.raises(ValueError, match="f32"):
+        CommConfig(strategy="dense", wire_dtype="fp8_e4m3")
+    # the CLI constructor fills the per-strategy default
+    assert make_comm_config("ring_fp8").wire_dtype == "fp8_e4m3"
+    assert make_comm_config("ring").wire_dtype == "f32"
+    assert make_comm_config("ring_fp8", "fp8_e5m2").wire_fmt == "e5m2"
+    assert make_comm_config("dense").wire_fmt is None
+
+
+def test_wire_stat_bytes_accounting():
+    sym = (8, 2, 16, 16)                 # blocked symmetric factor
+    t = 16 * 17 // 2
+    dense = 8 * 2 * 16 * 16 * 4
+    assert wire_stat_bytes(sym, True, make_comm_config("dense")) == dense
+    assert wire_stat_bytes(sym, True, make_comm_config("ring")) \
+        == 8 * 2 * t * 4
+    assert wire_stat_bytes(sym, True, make_comm_config("ring_fp8")) \
+        == 8 * 2 * (t + 4)
+    # replication fallback always prices the raw f32 collective
+    assert wire_stat_bytes(sym, True, make_comm_config("ring_fp8"),
+                           scattered=False) == dense
+    # non-symmetric stats ride the ring as dense f32 rows
+    assert wire_stat_bytes((8, 5), False, make_comm_config("ring_fp8")) \
+        == 8 * 5 * 4
+
+
+def _mesh(shape=(4, 2)):
+    return compat.make_mesh(shape, ("data", "model"))
+
+
+def _template(shapes: dict):
+    return {"fam": {k: jax.ShapeDtypeStruct(s, jnp.float32)
+                    for k, s in shapes.items()}}
+
+
+@needs_devices
+def test_scatter_decisions_auto_vs_all():
+    mesh = _mesh()                        # data=4, model=2
+    auto = FactorReducer(mesh, manual_axes="auto")
+    assert auto.dp == ("data",) and auto.ndev == 4
+    assert auto.scatter_axes(8) == ("data",)
+    assert auto.scatter_axes(2) == ()     # indivisible -> replicate
+    assert auto.scatter_axes(6) == ()
+    assert auto.out_spec((8, 3, 3)) == P(("data",), None, None)
+    assert auto.out_spec((6, 3)) == P()
+
+    full = FactorReducer(mesh, manual_axes="all")
+    assert full.dp == ("data", "model") and full.ndev == 8
+    assert full.scatter_axes(16) == ("data", "model")
+    assert full.scatter_axes(4) == ("data",)   # falls back to data only
+    assert full.scatter_axes(2) == ()
+
+
+@needs_devices
+def test_scatter_decisions_single_device_mesh():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    red = FactorReducer(mesh, manual_axes="auto",
+                        template=_template({"a": (3, 2, 4, 4)}))
+    # a 1-sized data axis divides everything: trivial scatter, no fallback
+    assert red.ndev == 1
+    assert red.scatter_axes(3) == ("data",)
+    assert red.replicated == []
+
+
+@needs_devices
+def test_replication_tally_logged_and_in_summary(caplog):
+    import logging
+    mesh = _mesh()
+    with caplog.at_level(logging.WARNING, logger="repro.comm.comm"):
+        red = FactorReducer(mesh, template=_template(
+            {"a": (8, 2, 4, 4), "g": (6, 2, 4, 4), "uw": (3, 4)}),
+            sym_fn=lambda fam, key: key in ("a", "g"))
+    assert sorted(red.replicated) == ["fam.g", "fam.uw"]
+    assert any("fall back to fully replicated" in r.message
+               for r in caplog.records)
+    rep = red.scatter_report()
+    assert rep["n_replicated"] == 2 and rep["n_stats"] == 3
+
+    ctrl = IntervalController(["fam.a", "fam.g", "fam.uw"],
+                              wire_bytes_per_stat=red.wire_bytes_per_stat())
+    ctrl.record_comm(rep)
+    s = ctrl.summary()["comm"]
+    assert s["replicated_stats"] == ["fam.g", "fam.uw"]
+    assert s["n_replicated"] == 2
+    assert s["strategy"] == "dense"
+
+
+def test_wire_ledger_column():
+    ctrl = IntervalController(["x", "y"], alpha=0.5,
+                              bytes_per_stat={"x": 10, "y": 20},
+                              wire_bytes_per_stat={"x": 100, "y": 200})
+    flags = {"x": True, "y": False}
+    ctrl.update(1, flags, {"x": (0.0, 0.0)})
+    s = ctrl.summary()["comm"]
+    assert s["total_wire_bytes"] == 100       # only the refreshed stat
+    assert s["dense_wire_bytes"] == 300       # refresh-every-step baseline
+    # round-trips through the checkpoint codec
+    ctrl2 = IntervalController.from_state_dict(ctrl.state_dict())
+    assert ctrl2.total_wire_bytes == 100 and ctrl2.dense_wire_bytes == 300
+    assert ctrl2.stats["y"].wire_bytes_per_refresh == 200
+
+
+# ---------------------------------------------------------------------------
+# ring hop codec dispatch ops (ref vs pallas bit parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 36), (2, 3, 130)])
+def test_ring_hop_pack_unpack_ref_vs_pallas(shape):
+    rng = np.random.RandomState(0)
+    rows = jnp.asarray(rng.randn(*shape) * 7, jnp.float32)
+    pay_r, sc_r = jax.jit(
+        lambda x: dispatch.ring_hop_pack(x, backend="ref"))(rows)
+    pay_p, sc_p = dispatch.ring_hop_pack(rows, backend="pallas")
+    assert pay_r.shape == shape and sc_r.shape == shape[:-1]
+    np.testing.assert_array_equal(np.asarray(pay_r).view(np.uint8),
+                                  np.asarray(pay_p).view(np.uint8))
+    np.testing.assert_array_equal(np.asarray(sc_r), np.asarray(sc_p))
+    out_r = jax.jit(
+        lambda p, s: dispatch.ring_hop_unpack(p, s, backend="ref"))(
+            pay_r, sc_r)
+    out_p = dispatch.ring_hop_unpack(pay_p, sc_p, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(out_r), np.asarray(out_p))
+    # codec round-trip stays within the fp8 bound
+    amax = np.abs(np.asarray(rows)).max(-1, keepdims=True)
+    assert (np.abs(np.asarray(out_r) - np.asarray(rows))
+            <= 0.25 * amax).all()
+
+
+# ---------------------------------------------------------------------------
+# reduce parity on the multi-device CPU mesh
+# ---------------------------------------------------------------------------
+
+def _reduce_with(mesh, manual_axes, strat, raw_all, template, sym_fn):
+    red = FactorReducer(mesh, manual_axes=manual_axes,
+                        comm=make_comm_config(strat), template=template,
+                        sym_fn=sym_fn)
+
+    def body(raw):
+        return red.reduce(jax.tree.map(lambda x: x[0], raw))
+
+    in_specs = jax.tree.map(lambda _: P(red.dp), raw_all)
+    fn = compat.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                          out_specs=red.out_specs(),
+                          axis_names=set(red.dp))
+    return jax.tree.map(np.asarray, jax.jit(fn)(raw_all)), red
+
+
+@needs_devices
+@pytest.mark.parametrize("manual_axes", ["auto", "all"])
+def test_reduce_parity_dense_ring_ring_fp8(manual_axes):
+    mesh = _mesh()
+    ndev = 4 if manual_axes == "auto" else 8
+    shapes = {"a": (8, 2, 16, 16),        # symmetric: rides the ring packed
+              "d": (8, 6),                # non-symmetric: f32 ring
+              "uw": (3, 4)}               # indivisible: replicated psum
+    template = _template(shapes)
+    sym_fn = lambda fam, key: key == "a"  # noqa: E731
+    rng = np.random.RandomState(0)
+    f = rng.randn(ndev, 8, 2, 16, 16).astype(np.float32)
+    raw_all = {"fam": {"a": jnp.asarray(f + np.swapaxes(f, -1, -2)),
+                       "d": jnp.asarray(rng.randn(ndev, 8, 6), np.float32),
+                       "uw": jnp.asarray(rng.randn(ndev, 3, 4), np.float32)}}
+
+    truth = jax.tree.map(lambda x: np.asarray(x).sum(0), raw_all)
+    out = {}
+    for strat in STRATEGIES:
+        out[strat], red = _reduce_with(mesh, manual_axes, strat, raw_all,
+                                       template, sym_fn)
+        assert red.replicated == ["fam.uw"]
+        # replicated fallback is strategy-independent plain psum
+        np.testing.assert_allclose(out[strat]["fam"]["uw"],
+                                   truth["fam"]["uw"], rtol=1e-6)
+
+    # dense == the raw psum_scatter the pre-refactor train.py emitted,
+    # bit for bit
+    def psum_scatter_body(raw):
+        v = raw["fam"]["a"][0]
+        return jax.lax.psum_scatter(
+            v, red.scatter_axes(v.shape[0]), scatter_dimension=0, tiled=True)
+
+    raw_specs = jax.tree.map(lambda _: P(red.dp), raw_all)
+    base = compat.shard_map(
+        psum_scatter_body, mesh=mesh, in_specs=(raw_specs,),
+        out_specs=red.out_spec(shapes["a"]), axis_names=set(red.dp))
+    np.testing.assert_array_equal(out["dense"]["fam"]["a"],
+                                  np.asarray(jax.jit(base)(raw_all)))
+
+    # ring: same sums, different (hardware-ring) order -> f32 noise only
+    for key in ("a", "d"):
+        np.testing.assert_allclose(out["ring"]["fam"][key],
+                                   out["dense"]["fam"][key],
+                                   rtol=1e-5, atol=1e-5)
+    # ring_fp8: symmetric stat quantizes per hop ((p-1) hops, one rounding
+    # each, <= amax/28 per hop for e4m3 — pinned with margin); the
+    # non-symmetric stat stays on the f32 ring
+    amax = np.abs(out["dense"]["fam"]["a"]).max()
+    err = np.abs(out["ring_fp8"]["fam"]["a"] - out["dense"]["fam"]["a"]).max()
+    assert err <= 0.1 * amax, (err, amax)
+    np.testing.assert_allclose(out["ring_fp8"]["fam"]["d"],
+                               out["dense"]["fam"]["d"],
+                               rtol=1e-5, atol=1e-5)
+
+    # wire accounting: ring halves the symmetric payload, fp8 <= 0.3x dense
+    wires = {s: sum(FactorReducer(
+        mesh, manual_axes=manual_axes, comm=make_comm_config(s),
+        template=template, sym_fn=sym_fn).wire_bytes_per_stat().values())
+        for s in STRATEGIES}
+    assert wires["ring"] < 0.65 * wires["dense"]
+    assert wires["ring_fp8"] <= 0.3 * wires["dense"]
+
+
+# ---------------------------------------------------------------------------
+# e2e: the shard_map train step under each strategy
+# ---------------------------------------------------------------------------
+
+def _setup():
+    from repro.configs import get_config
+    from repro.core.ngd import NGDConfig, SPNGD
+    from repro.models.transformer import DecoderLM
+    cfg = get_config("llama3_2_1b").reduced(head_dim=32, d_ff=128,
+                                            vocab=256, kfac_max_dim=64)
+    model = DecoderLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = SPNGD(model.loss, model.site_infos(), model.fstats,
+                model.site_counts, NGDConfig(damping=1e-3))
+    state = opt.init(params)
+    rng = np.random.RandomState(0)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (8, 16)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (8, 16)),
+                                   jnp.int32)}
+    flags = {k: jnp.asarray(True) for k in opt.stat_names()}
+    return model, opt, params, state, batch, flags
+
+
+@needs_devices
+def test_e2e_ring_fp8_matches_dense_20_steps():
+    """The acceptance criterion: --comm-strategy ring_fp8 reaches 20-step
+    loss parity with dense f32 under shard_map. Mesh (2, 4) so the layer
+    axis (L=2) scatters and every factor family actually rides the ring."""
+    from repro.launch.train import make_shardmap_train_step
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
+    losses = {}
+    for strat in ("dense", "ring_fp8"):
+        model, opt, params, state, batch, flags = _setup()
+        with compat.set_mesh(mesh):
+            step = jax.jit(make_shardmap_train_step(
+                model, opt, mesh, comm=make_comm_config(strat)))
+            out = []
+            for _ in range(20):
+                params, state, m = step(params, state, batch, flags,
+                                        1e-3, 5e-3, 0.9)
+                out.append(float(m["loss"]))
+        losses[strat] = out
+        # every stat scatters on this mesh — the fp8 wire is exercised
+        assert step.reducer.replicated == []
+    assert np.isfinite(losses["ring_fp8"]).all()
+    assert losses["ring_fp8"][-1] < losses["ring_fp8"][0]   # it trains
+    # pre-chaos prefix tightly (see test_train_step_backends_match_20_steps
+    # for why this overfit fixture diverges bitwise after ~8 steps), then
+    # both runs must stay trained
+    np.testing.assert_allclose(losses["dense"][:8], losses["ring_fp8"][:8],
+                               rtol=2e-2, atol=2e-2)
+    assert max(losses["dense"][8:]) < 1.0
+    assert max(losses["ring_fp8"][8:]) < 1.0
+
+    # measured wire bytes <= 0.3x the dense f32 collective (acceptance)
+    wire = {s: sum(FactorReducer(
+        mesh, comm=make_comm_config(s),
+        template=jax.eval_shape(opt.fstats_fn),
+        sym_fn=opt.sym_stat).wire_bytes_per_stat().values())
+        for s in ("dense", "ring_fp8")}
+    assert wire["ring_fp8"] <= 0.3 * wire["dense"], wire
+
+
+@needs_devices
+def test_shardmap_single_device_group_matches_jit():
+    """Degenerate mesh (data axis of size 1): every strategy reduces to the
+    local statistics — the shard_map step must match the plain jit step."""
+    from repro.launch.train import make_train_step, make_shardmap_train_step
+    model, opt, params, state, batch, flags = _setup()
+    p_ref, s_ref, m_ref = jax.jit(make_train_step(model, opt))(
+        params, state, batch, flags, 1e-3, 1e-2, 0.9)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
+        step = jax.jit(make_shardmap_train_step(
+            model, opt, mesh, comm=make_comm_config("ring_fp8")))
+        p_sm, s_sm, m_sm = step(params, state, batch, flags, 1e-3, 1e-2, 0.9)
+    # p == 1: zero ring hops, so even ring_fp8 never quantizes
+    np.testing.assert_allclose(float(m_ref["loss"]), float(m_sm["loss"]),
+                               rtol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32),
+        rtol=2e-5, atol=2e-5), p_ref, p_sm)
