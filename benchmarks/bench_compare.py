@@ -1,0 +1,122 @@
+"""Diff two BENCH_kernels.json snapshots and flag wall-clock regressions.
+
+    PYTHONPATH=src python -m benchmarks.bench_compare OLD.json NEW.json \
+        [--threshold 0.25] [--rows 'comm.*'] [--metric us]
+
+For every row present in both snapshots, prints the old/new value of the
+timing metric and the ratio new/old; rows whose ratio exceeds
+``1 + threshold`` are marked REGRESSED and flip the exit code to 1 (the CI
+gate). Ratio-style rows (``*_ratio`` / ``ratio`` fields, e.g.
+``comm.ring_vs_dense.us_ratio``) are compared on the ratio itself — a ratio
+row regresses when it GROWS past ``old * (1 + threshold)``, with an absolute
+floor of +0.05 so noise around tiny ratios doesn't trip the gate.
+
+Timing rows on CPU are interpret-mode measurements with real run-to-run
+variance; the default 25% threshold is deliberately loose — the gate exists
+to catch the 2-3x wall-clock regressions (like the pre-PR-6 ring hop loop),
+not 10% noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+
+# fields treated as the timing metric, in preference order
+_TIMING_FIELDS = ("us",)
+# fields that are themselves the tracked quantity on derived rows
+_RATIO_FIELDS = ("us_ratio", "ratio", "flops_ratio", "wire_ratio")
+
+
+def load_results(path: str) -> dict:
+    with open(path) as f:
+        rec = json.load(f)
+    return rec.get("results", rec)
+
+
+def _metric(rec: dict, metric: str):
+    """(kind, value) for one row: explicit --metric, else timing, else the
+    first ratio-style field. None when the row carries neither."""
+    if metric != "auto":
+        v = rec.get(metric)
+        return (None if v is None else ("explicit", float(v)))
+    for f in _TIMING_FIELDS:
+        if f in rec and rec[f]:
+            return ("us", float(rec[f]))
+    for f in _RATIO_FIELDS:
+        if f in rec:
+            return (f, float(rec[f]))
+    return None
+
+
+def compare(old: dict, new: dict, threshold: float, rows: str,
+            metric: str = "auto") -> tuple[list, list]:
+    """Returns (report_lines, regressed_names)."""
+    lines, regressed = [], []
+    names = sorted(set(old) & set(new))
+    matched = [n for n in names if fnmatch.fnmatch(n, rows)]
+    for name in matched:
+        mo = _metric(old[name], metric)
+        mn = _metric(new[name], metric)
+        if mo is None or mn is None or mo[0] != mn[0]:
+            continue
+        kind, vo = mo
+        _, vn = mn
+        ratio = vn / vo if vo else float("inf")
+        if kind in _RATIO_FIELDS:
+            # derived-ratio rows regress when the tracked ratio grows;
+            # +0.05 absolute floor keeps noise around small ratios quiet
+            bad = vn > max(vo * (1.0 + threshold), vo + 0.05)
+            lines.append(f"{name:40s} {kind}: {vo:8.3f} -> {vn:8.3f} "
+                         f"({ratio:5.2f}x){'  REGRESSED' if bad else ''}")
+        else:
+            bad = ratio > 1.0 + threshold
+            lines.append(f"{name:40s} us: {vo:10.1f} -> {vn:10.1f} "
+                         f"({ratio:5.2f}x){'  REGRESSED' if bad else ''}")
+        if bad:
+            regressed.append(name)
+    dropped = [n for n in sorted(set(old) - set(new))
+               if fnmatch.fnmatch(n, rows)]
+    for name in dropped:
+        lines.append(f"{name:40s} MISSING from new snapshot")
+    return lines, regressed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_kernels.json snapshots")
+    ap.add_argument("old", help="baseline snapshot (e.g. the committed one)")
+    ap.add_argument("new", help="freshly measured snapshot")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional growth before a row is a "
+                         "regression (default 0.25 = +25%%)")
+    ap.add_argument("--rows", default="*",
+                    help="glob over row names (e.g. 'comm.*')")
+    ap.add_argument("--metric", default="auto",
+                    help="force one field (e.g. us, wire_bytes) instead of "
+                         "the auto timing/ratio pick")
+    args = ap.parse_args(argv)
+
+    old = load_results(args.old)
+    new = load_results(args.new)
+    lines, regressed = compare(old, new, args.threshold, args.rows,
+                               args.metric)
+    if not lines:
+        print(f"no rows matched {args.rows!r} in both snapshots",
+              file=sys.stderr)
+        return 2
+    for ln in lines:
+        print(ln)
+    if regressed:
+        print(f"\n{len(regressed)} row(s) regressed past "
+              f"+{args.threshold:.0%}: {', '.join(regressed)}",
+              file=sys.stderr)
+        return 1
+    print(f"\nOK: no row regressed past +{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -215,11 +215,19 @@ def _bench_comm_local(quick: bool):
         "d": jnp.asarray(rng.randn(ndev, lead, nb * b), np.float32) ** 2,
     }}
 
+    # hier models the 8 virtual devices as 2 hosts x (ndev/2) devices so
+    # both levels (intra psum_scatter + inter fp8 ring) run
+    dph = max(ndev // 2, 1)
+    cfgs = {
+        "dense": make_comm_config("dense"),
+        "ring": make_comm_config("ring"),
+        "ring_fp8": make_comm_config("ring_fp8"),
+        "hier": make_comm_config("hier", devices_per_host=dph),
+    }
     out = {}
     results = {}
-    for strat in ("dense", "ring", "ring_fp8"):
-        red = FactorReducer(mesh, comm=make_comm_config(strat),
-                            template=template,
+    for strat, cfg in cfgs.items():
+        red = FactorReducer(mesh, comm=cfg, template=template,
                             sym_fn=lambda fam, key: key == "a")
 
         def body(raw):
@@ -235,7 +243,13 @@ def _bench_comm_local(quick: bool):
             "us": t,
             "wire_bytes": sum(red.wire_bytes_per_stat().values()),
         }
-    for strat in ("ring", "ring_fp8"):
+        if strat == "hier":
+            levels = red.wire_bytes_per_stat_levels().values()
+            out["comm.reduce_hier"]["intra_wire_bytes"] = sum(
+                i for i, _ in levels)
+            out["comm.reduce_hier"]["inter_wire_bytes"] = sum(
+                j for _, j in levels)
+    for strat in ("ring", "ring_fp8", "hier"):
         err = max(float(np.max(np.abs(a - d))) for a, d in zip(
             jax.tree.leaves(results[strat]),
             jax.tree.leaves(results["dense"])))
@@ -254,6 +268,50 @@ def _bench_comm_local(quick: bool):
         "fp8_wire_bytes": out["comm.reduce_ring_fp8"]["wire_bytes"],
         "f32_dense_wire_bytes": wd,
         "maxerr": out["comm.reduce_ring_fp8"]["maxerr_vs_dense"],
+    }
+    # acceptance gauge: hier's inter-host level <= 0.2x dense f32
+    out["comm.hier_inter_over_dense"] = {
+        "ratio": out["comm.reduce_hier"]["inter_wire_bytes"] / wd,
+        "inter_wire_bytes": out["comm.reduce_hier"]["inter_wire_bytes"],
+        "intra_wire_bytes": out["comm.reduce_hier"]["intra_wire_bytes"],
+        "f32_dense_wire_bytes": wd,
+        "devices_per_host": dph,
+        "maxerr": out["comm.reduce_hier"]["maxerr_vs_dense"],
+    }
+
+    # fused: the reducer consumes PRE-PACKED wire payloads (what the fused
+    # SYRK epilogue emits); quantize once per source here, exactly as the
+    # kernel would, then reduce the {"payload","scale"} tree
+    from repro import quant
+    from repro.core import kfac
+    pay, sc = quant.quantize_rows(
+        kfac.sym_pack(raw_all["fam"]["a"]), "e4m3", "fp32")
+    raw_wire = {"fam": {"a": {"payload": pay, "scale": sc},
+                        "d": raw_all["fam"]["d"]}}
+    template_w = {"fam": {
+        "a": {"payload": jax.ShapeDtypeStruct(pay.shape[1:], pay.dtype),
+              "scale": jax.ShapeDtypeStruct(sc.shape[1:], sc.dtype)},
+        "d": template["fam"]["d"],
+    }}
+    red = FactorReducer(mesh, comm=make_comm_config("fused"),
+                        template=template_w,
+                        sym_fn=lambda fam, key: key == "a")
+
+    def body_w(raw):
+        return red.reduce(jax.tree.map(lambda x: x[0], raw))
+
+    in_specs = jax.tree.map(lambda _: P("data"), raw_wire)
+    fn = jax.jit(compat.shard_map(
+        body_w, mesh=mesh, in_specs=(in_specs,),
+        out_specs=red.out_specs(), axis_names={"data"}))
+    t = time_fn(fn, raw_wire, warmup=1, iters=3)
+    res = jax.tree.map(np.asarray, fn(raw_wire))
+    err = max(float(np.max(np.abs(a - d))) for a, d in zip(
+        jax.tree.leaves(res), jax.tree.leaves(results["dense"])))
+    out["comm.reduce_fused"] = {
+        "us": t,
+        "wire_bytes": sum(red.wire_bytes_per_stat().values()),
+        "maxerr_vs_dense": err,
     }
     return out
 

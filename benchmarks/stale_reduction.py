@@ -7,9 +7,10 @@ the statistics ReduceScatterV traffic (symmetric-packed bytes), matching
 Table 2's "reduction" column, and (b) the per-step byte series (Fig. 6)
 written to ``experiments/comm_volume_bs{bs}.csv`` — one row per step with
 the storage-ledger bytes plus a wire-bytes column per Stage-3 strategy
-(dense / ring / ring_fp8; ``repro.comm``). Also reports the same run at two
-batch sizes — the paper's observation is that LARGER batches fluctuate less
-and reduce more.
+(dense / ring / ring_fp8 / hier / fused; ``repro.comm``), and for ``hier``
+the per-level (intra-host / inter-host) split under a modelled 2-host x
+4-device scatter group. Also reports the same run at two batch sizes — the
+paper's observation is that LARGER batches fluctuate less and reduce more.
 """
 
 from __future__ import annotations
@@ -27,13 +28,28 @@ from repro.core.stale import IntervalController
 from repro.data.synthetic import image_batches
 
 
+# the CSV's wire columns are a topology MODEL, not a measurement: price the
+# hier split at the paper-style 2 hosts x 4 devices (scatter group of 8).
+# Flat strategies ignore both knobs.
+_HIER_DPH = 4
+_HIER_GROUP = 8
+
+
+def _cfg(strategy: str):
+    if strategy == "hier":
+        return make_comm_config(strategy, devices_per_host=_HIER_DPH)
+    return make_comm_config(strategy)
+
+
 def _run_training(batch_size: int, steps: int, seed: int = 0):
     model, params = make_convnet(widths=(8, 16), blocks=1, seed=seed)
     data = image_batches(10, batch_size, size=16, seed=seed)
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts, NGDConfig(damping=1e-3))
     state = opt.init(params)
-    wire = {s: opt.wire_bytes(make_comm_config(s)) for s in STRATEGIES}
+    wire = {s: opt.wire_bytes(_cfg(s), group_size=_HIER_GROUP)
+            for s in STRATEGIES}
+    hier_levels = opt.wire_level_bytes(_cfg("hier"), group_size=_HIER_GROUP)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
                               bytes_per_stat=opt.stat_bytes(),
                               wire_bytes_per_stat=wire["dense"])
@@ -59,6 +75,8 @@ def _run_training(batch_size: int, steps: int, seed: int = 0):
                       for k in refreshed if k.endswith(".a"))
         wire_cols = tuple(sum(wire[s][k] for k in refreshed)
                           for s in STRATEGIES)
+        wire_cols += (sum(hier_levels[k][0] for k in refreshed),
+                      sum(hier_levels[k][1] for k in refreshed))
         series.append((t, step_bytes, a_bytes, wire_cols, float(m["loss"])))
     return ctrl, series
 
@@ -72,8 +90,12 @@ def run(quick: bool = False):
     model, _ = make_convnet(widths=(8, 16), blocks=1)
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts, NGDConfig(damping=1e-3))
-    wire_totals = {s: sum(opt.wire_bytes(make_comm_config(s)).values())
+    wire_totals = {s: sum(opt.wire_bytes(_cfg(s),
+                                         group_size=_HIER_GROUP).values())
                    for s in STRATEGIES}
+    hier_levels = opt.wire_level_bytes(_cfg("hier"), group_size=_HIER_GROUP)
+    hier_intra = sum(v[0] for v in hier_levels.values())
+    hier_inter = sum(v[1] for v in hier_levels.values())
     for bs in ([64] if quick else [32, 128]):
         ctrl, series = _run_training(bs, steps)
         s = ctrl.summary()
@@ -81,7 +103,8 @@ def run(quick: bool = False):
                        f"reduction={100 * s['reduction_rate']:.1f}%"))
         with open(f"experiments/comm_volume_bs{bs}.csv", "w") as f:
             f.write("step,stat_bytes,a_bytes,"
-                    + ",".join(f"wire_{s}" for s in STRATEGIES) + ",loss\n")
+                    + ",".join(f"wire_{s}" for s in STRATEGIES)
+                    + ",wire_hier_intra,wire_hier_inter,loss\n")
             for t, b, ab, wc, l in series:
                 f.write(f"{t},{b},{ab},"
                         + ",".join(str(w) for w in wc) + f",{l:.4f}\n")
@@ -93,6 +116,11 @@ def run(quick: bool = False):
                        f"bytes={wire_totals[s]}"))
     out.append(row("table2.wire_fp8_over_f32", 0.0,
                    f"ratio={wire_totals['ring_fp8'] / wire_totals['dense']:.3f}"))
+    # hier's level split: the inter-host leg is the scarce resource the
+    # two-level reduce protects — report it against the dense f32 wire
+    out.append(row("table2.wire_hier_levels", 0.0,
+                   f"intra={hier_intra} inter={hier_inter} "
+                   f"inter/dense={hier_inter / wire_totals['dense']:.3f}"))
     # symmetric packing saving (paper §5.2): triangular vs full factor bytes
     model, _ = make_convnet(widths=(8, 16), blocks=1)
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,

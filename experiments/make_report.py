@@ -44,6 +44,7 @@ def comm_volume_section():
     print("| series | steps | stat bytes | wire dense | wire ring "
           "| wire ring_fp8 | fp8/dense |")
     print("|---|---|---|---|---|---|---|")
+    level_rows, flat_only = [], []
     for path in files:
         with open(path) as f:
             rows = list(csv.DictReader(f))
@@ -60,7 +61,31 @@ def comm_volume_section():
               f"| {fmt_bytes(tot['wire_dense'])} "
               f"| {fmt_bytes(tot['wire_ring'])} "
               f"| {fmt_bytes(tot['wire_ring_fp8'])} | {ratio:.3f} |")
+        if "wire_hier_intra" in rows[0]:
+            level_rows.append(
+                (name, sum(int(float(r["wire_hier_intra"])) for r in rows),
+                 sum(int(float(r["wire_hier_inter"])) for r in rows),
+                 tot["wire_dense"]))
+        else:
+            flat_only.append(name)
     print()
+    print("#### Per-level (hier) wire bytes\n")
+    if level_rows:
+        print("| series | intra-host | inter-host | inter/dense |")
+        print("|---|---|---|---|")
+        for name, intra, inter, dense in level_rows:
+            r = inter / dense if dense else float("nan")
+            print(f"| {name} | {fmt_bytes(intra)} | {fmt_bytes(inter)} "
+                  f"| {r:.3f} |")
+        print("\n_Two-level `hier` split under the modelled 2-host x "
+              "4-device scatter group: full-precision intra-host "
+              "psum_scatter vs fp8 inter-host ring — the inter-host leg is "
+              "the leg the hierarchy shrinks._\n")
+    if flat_only:
+        print(f"_{', '.join(flat_only)}: only flat strategies were run "
+              "(no per-level wire columns in the ledger); regenerate with "
+              "`PYTHONPATH=src python -m benchmarks.run --only "
+              "stale_reduction` for the intra-/inter-host split._\n")
 
 
 def main():

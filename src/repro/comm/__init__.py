@@ -1,8 +1,11 @@
 """Stage-3 communication subsystem (see :mod:`repro.comm.comm`)."""
 
 from repro.comm.comm import (CommConfig, FactorReducer, STRATEGIES,
-                             WIRE_DTYPES, make_comm_config,
-                             template_wire_bytes, wire_stat_bytes)
+                             WIRE_DTYPES, hier_split, make_comm_config,
+                             template_wire_bytes, template_wire_level_bytes,
+                             wire_stat_bytes, wire_stat_level_bytes)
 
 __all__ = ["CommConfig", "FactorReducer", "STRATEGIES", "WIRE_DTYPES",
-           "make_comm_config", "template_wire_bytes", "wire_stat_bytes"]
+           "hier_split", "make_comm_config", "template_wire_bytes",
+           "template_wire_level_bytes", "wire_stat_bytes",
+           "wire_stat_level_bytes"]

@@ -30,6 +30,29 @@ Strategies
     hop count (p-1 hops x <= amax/28 for e4m3) instead of compounding.
     Non-symmetric statistics (diag / unit-wise — a rounding-sensitive,
     byte-wise negligible minority) stay on the f32 ring.
+``hier``
+    Two-level reduce following host topology (Osawa et al. 2019/2020): the
+    device group of size p splits into H hosts x D local devices
+    (``CommConfig.devices_per_host``, defaulting from
+    ``jax.local_device_count()``; D = gcd(devices_per_host, p)). Level 1 is
+    an intra-host ``psum_scatter`` at full precision (f32 sym-packed
+    triangle for symmetric factors); level 2 is D parallel inter-host rings
+    over host peers with the configured wire dtype (fp8 by default). A
+    static chunk permutation before level 1 makes the final chunk ownership
+    identical to ``psum_scatter(tiled=True)``, so out_specs are strategy
+    invariant. Hop count and fp8 wire bytes scale with H (hosts), not p
+    (devices); the ledger itemizes the two levels separately
+    (:meth:`FactorReducer.wire_bytes_per_stat_levels`).
+``fused``
+    Consumes **pre-packed wire payloads** produced by the fused SYRK
+    epilogue (``factor_sum_wire``): symmetric factors arrive at the reducer
+    already sym-packed + fp8-quantized as ``{"payload", "scale"}`` dicts, so
+    the raw f32 factor sum never round-trips HBM and the reducer performs
+    ZERO ``ring_hop_pack`` dispatches. The exchange is a tiled fp8
+    ``all_to_all`` (payload + scales) followed by an f32 dequant-and-sum
+    over source devices — one rounding per source contribution, independent
+    of group size. Non-symmetric statistics (not wire-captured) ride the
+    dense ``psum_scatter`` path.
 
 Replication fallback
 --------------------
@@ -43,12 +66,10 @@ hands it to :meth:`repro.core.stale.IntervalController.record_comm` so
 The byte ledger convention: ``wire_stat_bytes`` counts the logical payload
 one full reduction moves per device (the same convention as the storage
 ledger) — the ring's (p-1)/p send factor applies equally to XLA's own
-reduce-scatter implementation and is deliberately left out.
-
-The planned fused SYRK-epilogue remote-DMA ring kernel (ROADMAP) registers
-as a fourth strategy here: it replaces :meth:`FactorReducer._ring` with a
-kernel that DMAs hop payloads peer-to-peer out of the factor-sum epilogue,
-and nothing in ``launch/train.py`` changes.
+reduce-scatter implementation and is deliberately left out. Under ``hier``
+the per-level breakdown prices level 1 at the full (packed) f32 array and
+level 2 at 1/D of the wire-encoded array (each device enters the inter-host
+ring holding only its 1/D slice); flat strategies report (0, 0) levels.
 """
 
 from __future__ import annotations
@@ -63,17 +84,29 @@ import numpy as np
 
 logger = logging.getLogger(__name__)
 
-STRATEGIES = ("dense", "ring", "ring_fp8")
+STRATEGIES = ("dense", "ring", "ring_fp8", "hier", "fused")
 WIRE_DTYPES = ("f32", "fp8_e4m3", "fp8_e5m2")
+
+# strategies whose inter-host / hop wire defaults to fp8 (make_comm_config)
+_FP8_DEFAULT_STRATEGIES = ("ring_fp8", "hier", "fused")
+
+# unroll the ring hop loop up to this many hops: a Python loop over static
+# hop indices lets XLA pipeline each hop's pack+ppermute against the next
+# chunk add, where lax.fori_loop serializes them behind a loop carry
+_RING_UNROLL_MAX_HOPS = 32
 
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
     """Stage-3 collective configuration (one per training run)."""
-    strategy: str = "dense"       # "dense" | "ring" | "ring_fp8"
+    strategy: str = "dense"       # one of STRATEGIES
     wire_dtype: str = "f32"       # "f32" | "fp8_e4m3" | "fp8_e5m2"
     fp8_scale_mode: str = "fp32"  # per-block scale mode for fp8 hops
     backend: Optional[str] = None  # kernel backend for hop pack/unpack
+    # host-topology model for "hier": local devices per host. None defaults
+    # to jax.local_device_count(); the 8-virtual-device subprocess benches
+    # override it (e.g. 4 -> a simulated 2-host x 4-device mesh).
+    devices_per_host: Optional[int] = None
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -82,14 +115,18 @@ class CommConfig:
         if self.wire_dtype not in WIRE_DTYPES:
             raise ValueError(f"unknown wire dtype {self.wire_dtype!r}; "
                              f"expected {WIRE_DTYPES}")
-        if self.strategy == "ring_fp8" and self.wire_dtype == "f32":
-            raise ValueError("ring_fp8 needs an fp8 wire_dtype "
+        if self.strategy in ("ring_fp8", "fused") \
+                and self.wire_dtype == "f32":
+            raise ValueError(f"{self.strategy} needs an fp8 wire_dtype "
                              "(fp8_e4m3 | fp8_e5m2); use make_comm_config "
                              "to get the e4m3 default")
         if self.strategy in ("dense", "ring") and self.wire_dtype != "f32":
             raise ValueError(f"strategy {self.strategy!r} moves f32 on the "
                              f"wire; --wire-dtype {self.wire_dtype} only "
-                             "applies to ring_fp8")
+                             "applies to ring_fp8 / hier / fused")
+        if self.devices_per_host is not None and self.devices_per_host < 1:
+            raise ValueError("devices_per_host must be >= 1 (or None to "
+                             "default from jax.local_device_count())")
 
     @property
     def wire_fmt(self) -> Optional[str]:
@@ -98,16 +135,45 @@ class CommConfig:
             return self.wire_dtype[4:]
         return None
 
+    def local_devices(self) -> int:
+        """Resolved devices-per-host (the "hier" level-1 group width)."""
+        if self.devices_per_host is not None:
+            return self.devices_per_host
+        return jax.local_device_count()
+
 
 def make_comm_config(strategy: str, wire_dtype: Optional[str] = None,
                      fp8_scale_mode: str = "fp32",
-                     backend: Optional[str] = None) -> CommConfig:
+                     backend: Optional[str] = None,
+                     devices_per_host: Optional[int] = None) -> CommConfig:
     """CLI-facing constructor: fills the per-strategy default wire dtype
-    (f32 for dense/ring, e4m3 for ring_fp8) when ``wire_dtype`` is None."""
+    (f32 for dense/ring, e4m3 for ring_fp8/hier/fused) when ``wire_dtype``
+    is None."""
     if wire_dtype is None:
-        wire_dtype = "fp8_e4m3" if strategy == "ring_fp8" else "f32"
+        wire_dtype = ("fp8_e4m3" if strategy in _FP8_DEFAULT_STRATEGIES
+                      else "f32")
     return CommConfig(strategy=strategy, wire_dtype=wire_dtype,
-                      fp8_scale_mode=fp8_scale_mode, backend=backend)
+                      fp8_scale_mode=fp8_scale_mode, backend=backend,
+                      devices_per_host=devices_per_host)
+
+
+def hier_split(cfg: CommConfig, group_size: int) -> tuple[int, int]:
+    """(D, H): intra-host width and host count for a device group of
+    ``group_size`` under ``cfg``'s topology model. D divides the group
+    evenly (gcd with the configured local width); D*H == group_size."""
+    import math
+    d = math.gcd(max(cfg.local_devices(), 1), group_size)
+    return d, group_size // d
+
+
+def _leaf_shape(leaf) -> tuple:
+    """Template-leaf shape in DENSE terms: wire-format dicts report the
+    shape their payload decodes to, so scatter decisions and out_specs are
+    capture-format invariant."""
+    from repro import quant
+    if quant.is_wire(leaf):
+        return quant.wire_dense_shape(leaf)
+    return tuple(leaf.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -116,41 +182,110 @@ def make_comm_config(strategy: str, wire_dtype: Optional[str] = None,
 
 def template_wire_bytes(template: dict, sym_fn: Callable[[str, str], bool],
                         cfg: CommConfig,
-                        scattered_fn: Optional[Callable] = None
-                        ) -> dict[str, int]:
+                        scattered_fn: Optional[Callable] = None,
+                        group_size: Optional[int] = None) -> dict[str, int]:
     """Per-statistic wire bytes for a whole ``fstats`` template — the ONE
     walk behind both ``SPNGD.wire_bytes`` (mesh-less: assumes the paper's
     everything-scatters layout) and ``FactorReducer.wire_bytes_per_stat``
     (prices this mesh's replication fallbacks at dense f32 via
-    ``scattered_fn(name) -> bool``)."""
+    ``scattered_fn(name) -> bool``). ``group_size`` models the scatter
+    group for the hier level split (flat strategies ignore it)."""
     out = {}
     for fam, stats in template.items():
         for key, leaf in stats.items():
             name = f"{fam}.{key}"
             scattered = scattered_fn(name) if scattered_fn else True
-            out[name] = wire_stat_bytes(leaf.shape, sym_fn(fam, key), cfg,
-                                        scattered=scattered)
+            out[name] = wire_stat_bytes(_leaf_shape(leaf), sym_fn(fam, key),
+                                        cfg, scattered=scattered,
+                                        group_size=group_size)
+    return out
+
+
+def template_wire_level_bytes(template: dict,
+                              sym_fn: Callable[[str, str], bool],
+                              cfg: CommConfig,
+                              scattered_fn: Optional[Callable] = None,
+                              group_size: Optional[int] = None
+                              ) -> dict[str, tuple[int, int]]:
+    """Per-statistic (intra-host, inter-host) wire bytes for a whole
+    ``fstats`` template — the mesh-less counterpart of
+    ``FactorReducer.wire_bytes_per_stat_levels`` (same everything-scatters
+    assumption as :func:`template_wire_bytes`)."""
+    out = {}
+    for fam, stats in template.items():
+        for key, leaf in stats.items():
+            name = f"{fam}.{key}"
+            scattered = scattered_fn(name) if scattered_fn else True
+            out[name] = wire_stat_level_bytes(
+                _leaf_shape(leaf), sym_fn(fam, key), cfg,
+                scattered=scattered, group_size=group_size)
     return out
 
 
 def wire_stat_bytes(shape: tuple, symmetric: bool, cfg: CommConfig,
-                    scattered: bool = True) -> int:
+                    scattered: bool = True,
+                    group_size: Optional[int] = None) -> int:
     """Bytes one full Stage-3 reduction of this statistic moves per device.
 
     ``dense`` (and any replication fallback) moves the raw blocked f32
     array; ``ring`` moves the sym-packed f32 triangle for symmetric factors;
-    ``ring_fp8`` moves fp8 payload + one f32 scale per packed row. The
-    ring's (p-1)/p factor is deliberately not applied (see module docs)."""
+    ``ring_fp8`` and ``fused`` move fp8 payload + one f32 scale per packed
+    row; ``hier`` is the sum of its two levels (``wire_stat_level_bytes``,
+    priced for a group of ``group_size`` devices — default: one full host).
+    The ring's (p-1)/p factor is deliberately not applied (see module
+    docs)."""
     from repro import quant
     from repro.core.stale import sym_packed_bytes
     dense = int(np.prod(shape, dtype=np.int64)) * 4
     sym = symmetric and len(shape) >= 2 and shape[-1] == shape[-2]
-    if cfg.strategy == "dense" or not scattered or not sym:
+    if cfg.strategy == "dense" or not scattered:
+        return dense
+    if cfg.strategy == "hier":
+        # always the sum of the two levels — including non-sym stats,
+        # which ride level 1 dense and level 2 as a dense 1/D slice
+        intra, inter = wire_stat_level_bytes(shape, symmetric, cfg,
+                                             scattered=scattered,
+                                             group_size=group_size)
+        return intra + inter
+    if not sym:
         return dense
     if cfg.strategy == "ring":
         return sym_packed_bytes(shape, dtype_bytes=4)
-    # ring_fp8 wire tile == the fp8 storage tile: one accounting formula
+    # ring_fp8 / fused: wire tile == the fp8 storage tile, one formula
     return quant.encoded_nbytes(shape, symmetric=True)
+
+
+def wire_stat_level_bytes(shape: tuple, symmetric: bool, cfg: CommConfig,
+                          scattered: bool = True,
+                          group_size: Optional[int] = None
+                          ) -> tuple[int, int]:
+    """(intra-host, inter-host) wire bytes for one Stage-3 reduction of this
+    statistic. Only ``hier`` has a meaningful split — flat strategies return
+    ``(0, 0)`` so downstream reports can distinguish "no hierarchy ran" from
+    "zero bytes". Replication fallbacks bill their dense f32 psum to the
+    inter-host column (the worst wire). Level 1 moves the full (sym-packed)
+    f32 array across the D-device host group; level 2 moves each device's
+    1/D slice around the H-host ring in the configured wire dtype."""
+    from repro import quant
+    from repro.core.stale import sym_packed_bytes
+    if cfg.strategy != "hier":
+        return (0, 0)
+    dense = int(np.prod(shape, dtype=np.int64)) * 4
+    if not scattered:
+        return (0, dense)
+    if group_size is None:
+        group_size = cfg.local_devices()
+    d, h = hier_split(cfg, max(group_size, 1))
+    sym = symmetric and len(shape) >= 2 and shape[-1] == shape[-2]
+    if not sym:
+        return (dense if d > 1 else 0, dense // d if h > 1 else 0)
+    packed = sym_packed_bytes(shape, dtype_bytes=4)
+    intra = packed if d > 1 else 0
+    if h <= 1:
+        return (intra, 0)
+    if cfg.wire_fmt is not None:
+        return (intra, quant.encoded_nbytes(shape, symmetric=True) // d)
+    return (intra, packed // d)
 
 
 # ---------------------------------------------------------------------------
@@ -192,10 +327,11 @@ class FactorReducer:
         if template is not None:
             for fam, stats in template.items():
                 for key, leaf in stats.items():
-                    axes = (self.scatter_axes(leaf.shape[0])
-                            if len(leaf.shape) else ())
+                    shape = _leaf_shape(leaf)
+                    axes = (self.scatter_axes(shape[0])
+                            if len(shape) else ())
                     self._decisions[f"{fam}.{key}"] = axes
-                    if len(leaf.shape) and not axes:
+                    if len(shape) and not axes:
                         self.replicated.append(f"{fam}.{key}")
             if self.replicated and self.ndev > 1:
                 logger.warning(
@@ -228,16 +364,26 @@ class FactorReducer:
         return (P(axes, *(None,) * (len(shape) - 1)) if axes else P())
 
     def out_specs(self):
-        """Out-spec tree for the whole ``fstats`` template."""
+        """Out-spec tree for the whole ``fstats`` template. Wire-format
+        leaves spec their DECODED dense shape: the reducer dequantizes
+        after the collective, so shard_map bodies always return dense f32
+        regardless of the capture format."""
         if self.template is None:
             raise ValueError("FactorReducer needs a template for out_specs")
-        return {fam: {k: self.out_spec(leaf.shape)
+        return {fam: {k: self.out_spec(_leaf_shape(leaf))
                       for k, leaf in stats.items()}
                 for fam, stats in self.template.items()}
 
+    def group_size(self, axes: tuple) -> int:
+        """Number of devices in the scatter group ``axes`` spans."""
+        p = 1
+        for a in axes:
+            p *= self.mesh.shape[a]
+        return p
+
     def scatter_report(self) -> dict:
         """Host-side tally for IntervalController.record_comm / logging."""
-        return {
+        report = {
             "strategy": self.comm.strategy,
             "wire_dtype": self.comm.wire_dtype,
             "dp_axes": list(self.dp),
@@ -245,15 +391,44 @@ class FactorReducer:
             "n_replicated": len(self.replicated),
             "replicated_stats": sorted(self.replicated),
         }
+        if self.comm.strategy == "hier":
+            d, h = hier_split(self.comm, self.ndev)
+            report["hier_topology"] = {"devices_per_host": d, "hosts": h}
+        return report
 
     def wire_bytes_per_stat(self) -> dict[str, int]:
         """Per-refresh wire bytes of each statistic under this reducer's
-        ACTUAL decisions (replication fallbacks cost the full dense f32)."""
+        ACTUAL decisions (replication fallbacks cost the full dense f32;
+        ``hier`` levels are priced for each stat's actual group size)."""
         if self.template is None:
             raise ValueError("FactorReducer needs a template for wire bytes")
-        return template_wire_bytes(
-            self.template, self.sym_fn, self.comm,
-            scattered_fn=lambda name: bool(self._decisions.get(name)))
+        out = {}
+        for fam, stats in self.template.items():
+            for key, leaf in stats.items():
+                name = f"{fam}.{key}"
+                axes = self._decisions.get(name, ())
+                out[name] = wire_stat_bytes(
+                    _leaf_shape(leaf), self.sym_fn(fam, key), self.comm,
+                    scattered=bool(axes),
+                    group_size=self.group_size(axes) if axes else None)
+        return out
+
+    def wire_bytes_per_stat_levels(self) -> dict[str, tuple[int, int]]:
+        """Per-refresh (intra-host, inter-host) wire bytes per statistic —
+        the level breakdown behind the IntervalController's hier ledger
+        columns. Flat strategies report (0, 0) for every stat."""
+        if self.template is None:
+            raise ValueError("FactorReducer needs a template for wire bytes")
+        out = {}
+        for fam, stats in self.template.items():
+            for key, leaf in stats.items():
+                name = f"{fam}.{key}"
+                axes = self._decisions.get(name, ())
+                out[name] = wire_stat_level_bytes(
+                    _leaf_shape(leaf), self.sym_fn(fam, key), self.comm,
+                    scattered=bool(axes),
+                    group_size=self.group_size(axes) if axes else None)
+        return out
 
     # ---- traced entry points (call inside the shard_map region) ----
 
@@ -261,15 +436,24 @@ class FactorReducer:
         """Plain all-reduce over the data axes (gradients / loss)."""
         return jax.lax.psum(x, self.dp)
 
-    def reduce_stat(self, fam: str, key: str, v: jax.Array) -> jax.Array:
+    def reduce_stat(self, fam: str, key: str, v) -> jax.Array:
         """One statistic's Stage-3 reduce: scatter when divisible (strategy
-        applies), fully-replicated psum otherwise."""
+        applies), fully-replicated psum otherwise. Wire-format dicts from
+        the fused SYRK epilogue take the pre-packed all_to_all path and
+        come back decoded to dense f32."""
+        from repro import quant
+        if quant.is_wire(v):
+            return self._fused_wire(v)
         axes = self.scatter_axes(v.shape[0]) if v.ndim >= 1 else ()
         if not axes:
             return jax.lax.psum(v, self.dp)
-        if self.comm.strategy == "dense":
+        if self.comm.strategy in ("dense", "fused"):
+            # fused: non-wire stats (diag / unit-wise, never wire-captured)
+            # stay on the exact dense path
             v = jax.lax.psum_scatter(v, axes, scatter_dimension=0,
                                      tiled=True)
+        elif self.comm.strategy == "hier":
+            v = self._hier(v, axes, symmetric=self.sym_fn(fam, key))
         else:
             v = self._ring(v, axes, symmetric=self.sym_fn(fam, key))
         rest = tuple(a for a in self.dp if a not in axes)
@@ -309,10 +493,98 @@ class FactorReducer:
                 backend=self.comm.backend)
         return kfac.sym_unpack(v, b) if sym else v
 
+    # ---- the two-level hierarchical reduce ----
+
+    def _hier(self, v: jax.Array, axes: tuple, *,
+              symmetric: bool) -> jax.Array:
+        """Two-level reduce-scatter of ``v`` along dim 0: full-precision
+        ``psum_scatter`` across each D-device host group, then D disjoint
+        H-host rings (fp8 wire for symmetric factors) over host peers.
+        Final chunk ownership matches ``psum_scatter(tiled=True)``, so
+        out_specs are shared with every other strategy."""
+        from repro.core import kfac
+        p = self.group_size(axes)
+        sym = symmetric and v.ndim >= 3 and v.shape[-1] == v.shape[-2]
+        b = v.shape[-1] if sym else 0
+        if sym:
+            v = kfac.sym_pack(v.astype(jnp.float32))   # wire = triangle only
+        else:
+            v = v.astype(jnp.float32)
+        if p > 1:
+            an = axes if len(axes) > 1 else axes[0]
+            d_loc, h = hier_split(self.comm, p)
+            d0 = v.shape[0]
+            r = d0 // p
+            if d_loc > 1 and h > 1:
+                # chunk permutation: after the intra-host scatter, device
+                # (host h0, local l) must hold the STRIDED chunk set
+                # {h'*D + l}; permuting chunks (h', l) -> (l, h') up front
+                # makes the contiguous level-1 tiles exactly those sets,
+                # and the level-2 ring then lands chunk h0*D + l on flat
+                # device h0*D + l — the dense tiled ownership
+                v = v.reshape((h, d_loc, r) + v.shape[1:])
+                v = jnp.swapaxes(v, 0, 1).reshape((d0,) + v.shape[3:])
+            if d_loc > 1:
+                groups = ([[h0 * d_loc + l for l in range(d_loc)]
+                           for h0 in range(h)] if h > 1 else None)
+                v = jax.lax.psum_scatter(v, an, scatter_dimension=0,
+                                         tiled=True,
+                                         axis_index_groups=groups)
+            if h > 1:
+                idx = jax.lax.axis_index(an)
+                # D disjoint rings, one per local index l: host h0 forwards
+                # to host h0+1 at the same local slot
+                perm = [(h0 * d_loc + l, ((h0 + 1) % h) * d_loc + l)
+                        for h0 in range(h) for l in range(d_loc)]
+                v = _ring_reduce_scatter(
+                    v, an, h,
+                    fmt=self.comm.wire_fmt if sym else None,
+                    scale_mode=self.comm.fp8_scale_mode,
+                    backend=self.comm.backend,
+                    perm=perm, group_index=idx // d_loc)
+        return kfac.sym_unpack(v, b) if sym else v
+
+    # ---- the fused pre-packed path ----
+
+    def _fused_wire(self, entry: dict) -> jax.Array:
+        """Reduce one pre-packed wire-format stat (``{"payload", "scale"}``
+        from the fused SYRK epilogue): tiled fp8 ``all_to_all`` exchange,
+        then f32 dequant-and-sum over source devices, then unpack to dense
+        blocks. No ``ring_hop_pack`` runs — quantization happened exactly
+        once, inside the factor-sum kernel."""
+        from repro import quant
+        from repro.core import kfac
+        from repro.kernels import dispatch
+        payload, scale = entry["payload"], entry["scale"]
+        b = quant.tri_rows(payload.shape[-1])
+        backend = self.comm.backend
+        axes = self.scatter_axes(payload.shape[0]) if payload.ndim else ()
+        p = self.group_size(axes) if axes else 1
+        if not axes or p == 1:
+            v = kfac.sym_unpack(
+                dispatch.ring_hop_unpack(payload, scale, backend=backend),
+                b)
+            return jax.lax.psum(v, self.dp)
+        an = axes if len(axes) > 1 else axes[0]
+        payload = jax.lax.all_to_all(payload, an, split_axis=0,
+                                     concat_axis=0, tiled=True)
+        scale = jax.lax.all_to_all(scale, an, split_axis=0,
+                                   concat_axis=0, tiled=True)
+        v = dispatch.ring_hop_unpack(payload, scale, backend=backend)
+        c = v.shape[0] // p
+        v = jnp.sum(v.reshape((p, c) + v.shape[1:]), axis=0)
+        v = kfac.sym_unpack(v, b)
+        rest = tuple(a for a in self.dp if a not in axes)
+        if rest:
+            v = jax.lax.psum(v, rest)
+        return v
+
 
 def _ring_reduce_scatter(v: jax.Array, axis_name, p: int, *,
                          fmt: Optional[str], scale_mode: str,
-                         backend: Optional[str]) -> jax.Array:
+                         backend: Optional[str],
+                         perm: Optional[list] = None,
+                         group_index=None) -> jax.Array:
     """p-1-hop ring reduce-scatter along dim 0 (divisible by ``p``).
 
     Device with group index ``i`` ends holding chunk ``i`` fully reduced
@@ -320,12 +592,30 @@ def _ring_reduce_scatter(v: jax.Array, axis_name, p: int, *,
     partial sum travels as fp8 payload + per-row f32 scale (the
     ring_hop_pack/unpack dispatch ops); the accumulator itself stays f32,
     so quantization error is one rounding per hop, not compounding.
+
+    ``perm`` / ``group_index`` generalize the ring to disjoint sub-rings
+    over one mesh axis group (the hier strategy's D parallel inter-host
+    rings): ``perm`` lists every (src, dst) device pair and ``group_index``
+    is this device's position within ITS ring of size ``p``.
     """
     from repro.kernels import dispatch
     d = v.shape[0]
     c = d // p
-    idx = jax.lax.axis_index(axis_name)
-    perm = [(j, (j + 1) % p) for j in range(p)]
+    idx = jax.lax.axis_index(axis_name) if group_index is None \
+        else group_index
+    if fmt is None and perm is None:
+        # f32 wire has no per-hop codec, so nothing forces the manual hop
+        # loop: psum_scatter over the packed rows moves the SAME wire bytes
+        # and IS a ring reduce-scatter on real interconnects — at one
+        # collective's latency instead of p-1 serialized ppermutes (the
+        # rest of the ring-vs-dense wall-clock regression after the unroll
+        # below). The fp8 wire keeps the hop loop — per-hop requantization
+        # of the partial sum is its contract — and so do sub-group rings
+        # (perm set), whose chunk ownership is the caller's permutation.
+        return jax.lax.psum_scatter(v, axis_name, scatter_dimension=0,
+                                    tiled=True)
+    if perm is None:
+        perm = [(j, (j + 1) % p) for j in range(p)]
 
     def chunk(k):
         return jax.lax.dynamic_slice_in_dim(v, k * c, c, axis=0)
@@ -346,4 +636,12 @@ def _ring_reduce_scatter(v: jax.Array, axis_name, p: int, *,
     # each device seeds the ring with its local chunk (idx - 1) mod p; after
     # p-1 hops that chunk has visited every device and landed on its owner
     acc = chunk(jnp.mod(idx + p - 1, p))
+    if p - 1 <= _RING_UNROLL_MAX_HOPS:
+        # unrolled hops carry STATIC step indices: XLA overlaps each hop's
+        # pack/ppermute with the neighbouring chunk adds instead of
+        # serializing everything behind a fori_loop carry — this was the
+        # 3.0x ring-vs-dense wall-clock regression at p=8
+        for s in range(p - 1):
+            acc = body(s, acc)
+        return acc
     return jax.lax.fori_loop(0, p - 1, body, acc)

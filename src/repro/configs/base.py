@@ -46,6 +46,10 @@ class ArchConfig:
     backend: str = "auto"        # "ref" | "pallas" | "auto" (kernels.dispatch)
     # K-FAC
     kfac_max_dim: int = 2048
+    factor_wire: str = ""        # "" = dense f32 factor capture; "e4m3" /
+                                 # "e5m2" = the fused SYRK epilogue emits
+                                 # wire-format (fp8 payload + per-block
+                                 # scale) sums for full-kind factors
     head_g_kind: str = "diag"    # vocab-side factor of the LM head
     tp_shards: int = 0           # >0: align factor blocks to TP shard width
     min_block: int = 128         # don't align below this block size (MXU)

@@ -91,6 +91,18 @@ def factor_sum(x: jax.Array, max_dim: int, *,
     return dispatch.factor_sum(x, max_dim, backend=backend)
 
 
+def factor_sum_wire(x: jax.Array, max_dim: int, *, fmt: str = "e4m3",
+                    scale_mode: str = "fp32",
+                    backend: Optional[str] = None):
+    """Fused :func:`factor_sum` + wire-format epilogue: returns
+    ``(payload fp8 (..., nb, t), scale f32 (..., nb))`` — the sym-packed
+    per-block-quantized tile the Stage-3 "fused" strategy puts on the wire
+    (see :mod:`repro.kernels.dispatch` ``factor_sum_wire``)."""
+    from repro.kernels import dispatch
+    return dispatch.factor_sum_wire(x, max_dim, fmt=fmt,
+                                    scale_mode=scale_mode, backend=backend)
+
+
 def diag_factor_sum(x: jax.Array) -> jax.Array:
     """``sum_t x_t^2`` per output coordinate. (..., n, d) -> (..., d)."""
     x = x.astype(jnp.float32)

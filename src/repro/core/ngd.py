@@ -57,6 +57,16 @@ class NGDConfig:
                                      #  repro.kernels.dispatch)
 
 
+def _dense_leaf_shape(leaf) -> tuple:
+    """Template-leaf shape in dense f32 terms: wire-format capture dicts
+    (fused SYRK epilogue) report the shape their payload decodes to, so the
+    optimizer's history / preconditioner state is capture-format invariant."""
+    from repro import quant
+    if quant.is_wire(leaf):
+        return quant.wire_dense_shape(leaf)
+    return tuple(leaf.shape)
+
+
 def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
     """Average eigenvalue of a factor (full blocked or diagonal)."""
     if kind == "full":
@@ -149,16 +159,17 @@ class SPNGD:
         out = {}
         for fam, stats in template.items():
             for key, leaf in stats.items():
+                shape = _dense_leaf_shape(leaf)
                 if dtype_bytes is not None:
-                    out[f"{fam}.{key}"] = sym_packed_bytes(leaf.shape,
+                    out[f"{fam}.{key}"] = sym_packed_bytes(shape,
                                                            dtype_bytes)
                 else:
                     out[f"{fam}.{key}"] = stat_payload_bytes(
-                        leaf.shape, self.cfg.factor_dtype,
+                        shape, self.cfg.factor_dtype,
                         symmetric=self.sym_stat(fam, key))
         return out
 
-    def wire_bytes(self, comm=None) -> dict[str, int]:
+    def wire_bytes(self, comm=None, group_size=None) -> dict[str, int]:
         """Per-statistic Stage-3 collective payload under a
         :class:`repro.comm.CommConfig` — the wire-bytes column of the
         IntervalController ledger. Unlike :meth:`stat_bytes` (storage dtype)
@@ -171,7 +182,20 @@ class SPNGD:
         from repro import comm as comm_mod
         return comm_mod.template_wire_bytes(
             jax.eval_shape(self.fstats_fn), self.sym_stat,
-            comm or comm_mod.CommConfig())
+            comm or comm_mod.CommConfig(), group_size=group_size)
+
+    def wire_level_bytes(self, comm=None,
+                         group_size=None) -> dict[str, tuple[int, int]]:
+        """Per-statistic (intra-host, inter-host) Stage-3 wire bytes — the
+        ``hier`` level breakdown feeding the IntervalController's per-level
+        ledger. Flat strategies report (0, 0) everywhere (same mesh-less
+        everything-scatters assumption as :meth:`wire_bytes`).
+        ``group_size`` models the scatter-group size for the hier split
+        (default: this process's local device count)."""
+        from repro import comm as comm_mod
+        return comm_mod.template_wire_level_bytes(
+            jax.eval_shape(self.fstats_fn), self.sym_stat,
+            comm or comm_mod.CommConfig(), group_size=group_size)
 
     # ---- state ----
 
@@ -182,21 +206,22 @@ class SPNGD:
             info = self.infos[fam]
             entry = {"prev": {}, "prev2": {}, "precond": {}}
             for key, leaf in stats.items():
+                shape = _dense_leaf_shape(leaf)
                 z = self._encode_hist(fam, key,
-                                      jnp.zeros(leaf.shape, jnp.float32))
+                                      jnp.zeros(shape, jnp.float32))
                 entry["prev"][key] = z
                 if self.cfg.history >= 2:
                     entry["prev2"][key] = z
                 if key in ("a", "g"):
                     kind = info.spec.a_kind if key == "a" else info.spec.g_kind
                     if kind == "full":
-                        eye = jnp.broadcast_to(jnp.eye(leaf.shape[-1], dtype=jnp.float32),
-                                               leaf.shape)
+                        eye = jnp.broadcast_to(jnp.eye(shape[-1], dtype=jnp.float32),
+                                               shape)
                         entry["precond"][key] = eye
                     else:
-                        entry["precond"][key] = jnp.ones(leaf.shape, jnp.float32)
+                        entry["precond"][key] = jnp.ones(shape, jnp.float32)
                 else:                       # "d" (bias) / "uw" (2x2): store stats
-                    entry["precond"][key] = jnp.zeros(leaf.shape, jnp.float32)
+                    entry["precond"][key] = jnp.zeros(shape, jnp.float32)
             curv[fam] = entry
         return {
             "step": jnp.zeros((), jnp.int32),
@@ -213,6 +238,13 @@ class SPNGD:
         new_prev, new_prev2, sims = {}, {}, {}
         normalized = {}
         for key, v in raw.items():
+            from repro import quant
+            if quant.is_wire(v):
+                # fused wire capture under the plain-jit schedule: ONE
+                # dequant here (the counterpart of the shard_map reducer's
+                # post-collective decode) and the refresh math below is
+                # byte-identical to the dense path
+                v = quant.decode_wire_stat(v)
             norm = (v / n_a) if key == "a" else (v * n_g)
             norm = self.sharding_hook(fam, key, norm)
             flag = flags[f"{fam}.{key}"]

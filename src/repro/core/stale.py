@@ -43,6 +43,11 @@ class StatState:
     bytes_per_refresh: int = 0   # symmetric-packed storage payload
     wire_bytes_per_refresh: int = 0  # Stage-3 collective payload (the
                                      # actual wire dtype; repro.comm)
+    # per-level split of the wire payload under the hierarchical ("hier")
+    # strategy: intra-host full-precision scatter vs inter-host fp8 ring.
+    # Both stay 0 under flat strategies (the split is then meaningless).
+    wire_intra_bytes_per_refresh: int = 0
+    wire_inter_bytes_per_refresh: int = 0
     refresh_count: int = 0
 
 
@@ -52,7 +57,8 @@ class IntervalController:
     def __init__(self, stat_names: list[str], alpha: float = 0.1,
                  max_interval: int = 0,
                  bytes_per_stat: Optional[dict[str, int]] = None,
-                 wire_bytes_per_stat: Optional[dict[str, int]] = None):
+                 wire_bytes_per_stat: Optional[dict[str, int]] = None,
+                 wire_level_bytes_per_stat: Optional[dict] = None):
         self.alpha = alpha
         self.max_interval = max_interval          # 0 = unbounded (paper)
         self.stats = {n: StatState() for n in stat_names}
@@ -62,10 +68,19 @@ class IntervalController:
         if wire_bytes_per_stat:
             for n, b in wire_bytes_per_stat.items():
                 self.stats[n].wire_bytes_per_refresh = b
+        if wire_level_bytes_per_stat:
+            # {name: (intra, inter)} — FactorReducer.wire_bytes_per_stat_levels
+            for n, (intra, inter) in wire_level_bytes_per_stat.items():
+                self.stats[n].wire_intra_bytes_per_refresh = intra
+                self.stats[n].wire_inter_bytes_per_refresh = inter
         self.total_bytes = 0
         self.dense_bytes = 0                      # what refresh-every-step would cost
         self.total_wire_bytes = 0
         self.dense_wire_bytes = 0
+        self.total_wire_intra_bytes = 0
+        self.dense_wire_intra_bytes = 0
+        self.total_wire_inter_bytes = 0
+        self.dense_wire_inter_bytes = 0
         self.comm_info: dict = {}                 # reducer tally (record_comm)
         self.steps = 0
 
@@ -84,6 +99,8 @@ class IntervalController:
         for name, st in self.stats.items():
             self.dense_bytes += st.bytes_per_refresh
             self.dense_wire_bytes += st.wire_bytes_per_refresh
+            self.dense_wire_intra_bytes += st.wire_intra_bytes_per_refresh
+            self.dense_wire_inter_bytes += st.wire_inter_bytes_per_refresh
             if not flags.get(name, False):
                 continue
             d1, d2 = sims[name]
@@ -104,6 +121,8 @@ class IntervalController:
             st.refresh_count += 1
             self.total_bytes += st.bytes_per_refresh
             self.total_wire_bytes += st.wire_bytes_per_refresh
+            self.total_wire_intra_bytes += st.wire_intra_bytes_per_refresh
+            self.total_wire_inter_bytes += st.wire_inter_bytes_per_refresh
 
     # ---- Stage-3 comm bookkeeping (repro.comm reducer tally) ----
 
@@ -125,6 +144,10 @@ class IntervalController:
             "dense_bytes": self.dense_bytes,
             "total_wire_bytes": self.total_wire_bytes,
             "dense_wire_bytes": self.dense_wire_bytes,
+            "total_wire_intra_bytes": self.total_wire_intra_bytes,
+            "dense_wire_intra_bytes": self.dense_wire_intra_bytes,
+            "total_wire_inter_bytes": self.total_wire_inter_bytes,
+            "dense_wire_inter_bytes": self.dense_wire_inter_bytes,
             "comm_info": dict(self.comm_info),
             "stats": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
@@ -139,6 +162,11 @@ class IntervalController:
         # pre-PR-5 checkpoints have no wire ledger: resume at zero
         ctrl.total_wire_bytes = state.get("total_wire_bytes", 0)
         ctrl.dense_wire_bytes = state.get("dense_wire_bytes", 0)
+        # pre-PR-6 checkpoints have no per-level (hier) ledger: resume at 0
+        ctrl.total_wire_intra_bytes = state.get("total_wire_intra_bytes", 0)
+        ctrl.dense_wire_intra_bytes = state.get("dense_wire_intra_bytes", 0)
+        ctrl.total_wire_inter_bytes = state.get("total_wire_inter_bytes", 0)
+        ctrl.dense_wire_inter_bytes = state.get("dense_wire_inter_bytes", 0)
         ctrl.comm_info = dict(state.get("comm_info", {}))
         for n, s in state["stats"].items():
             ctrl.stats[n] = StatState(**s)
@@ -164,6 +192,11 @@ class IntervalController:
                 "total_wire_bytes": self.total_wire_bytes,
                 "dense_wire_bytes": self.dense_wire_bytes,
                 "wire_reduction_rate": wire_rate,
+                # hier per-level split; identically 0 under flat strategies
+                "total_wire_intra_bytes": self.total_wire_intra_bytes,
+                "dense_wire_intra_bytes": self.dense_wire_intra_bytes,
+                "total_wire_inter_bytes": self.total_wire_inter_bytes,
+                "dense_wire_inter_bytes": self.dense_wire_inter_bytes,
                 **self.comm_info,
             },
             "per_stat": {n: dataclasses.asdict(s) for n, s in self.stats.items()},

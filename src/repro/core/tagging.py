@@ -53,6 +53,14 @@ class FactorSpec:
 
     ``backend`` selects the factor-construction kernel for this site
     ("ref" | "pallas" | "auto"; :mod:`repro.kernels.dispatch`).
+
+    ``wire_fmt`` ("" | "e4m3" | "e5m2") switches FULL-kind factor capture to
+    the fused wire format: the site's accumulator (and its cotangent) become
+    ``{"payload": fp8 (lead..., nb, t), "scale": f32 (lead..., nb)}`` dicts
+    emitted by ``factor_sum_wire`` — sym-packed + per-block-quantized inside
+    the SYRK epilogue, so the raw f32 sum never round-trips HBM before the
+    Stage-3 collective (the "fused" comm strategy consumes these directly).
+    Diag / unit-wise stats are unaffected.
     """
     a_kind: str = "full"        # "full" | "diag" | "none"
     g_kind: str = "full"        # "full" | "diag" | "none"
@@ -60,6 +68,8 @@ class FactorSpec:
     a_max: int = 0              # 0 -> max_dim
     g_max: int = 0
     backend: str = "auto"       # kernel backend for this site's factor sums
+    wire_fmt: str = ""          # "" (dense f32) | "e4m3" | "e5m2"
+    wire_scale_mode: str = "fp32"  # per-block scale mode for wire capture
 
     @property
     def a_dim(self) -> int:
@@ -88,6 +98,21 @@ class FactorSpec:
         return None
 
 
+def _wire_zeros(spec: FactorSpec, shape: tuple[int, ...],
+                lead: tuple[int, ...]) -> dict:
+    """Zero wire-format accumulator for one full-kind factor of dense shape
+    ``(nb, b, b)``: fp8 payload rows + per-block f32 scales."""
+    from repro import quant
+    if spec.wire_fmt not in quant.FORMATS:
+        raise ValueError(f"unknown wire_fmt {spec.wire_fmt!r}; expected "
+                         f"{sorted(quant.FORMATS)}")
+    nb, b = shape[0], shape[-1]
+    t = b * (b + 1) // 2
+    return {"payload": jnp.zeros(lead + (nb, t),
+                                 quant.FORMATS[spec.wire_fmt]),
+            "scale": jnp.zeros(lead + (nb,), jnp.float32)}
+
+
 def make_stats(spec: FactorSpec, d_in: int, d_out: int,
                lead: tuple[int, ...] = ()) -> dict:
     """Zero stats-accumulator pytree for one site ("fstats" leaf)."""
@@ -95,17 +120,38 @@ def make_stats(spec: FactorSpec, d_in: int, d_out: int,
     sa = spec.a_shape(d_in)
     sg = spec.g_shape(d_out)
     if sa is not None:
-        out["a"] = jnp.zeros(lead + sa, jnp.float32)
+        out["a"] = (_wire_zeros(spec, sa, lead)
+                    if spec.wire_fmt and spec.a_kind == "full"
+                    else jnp.zeros(lead + sa, jnp.float32))
     if sg is not None:
-        out["g"] = jnp.zeros(lead + sg, jnp.float32)
+        out["g"] = (_wire_zeros(spec, sg, lead)
+                    if spec.wire_fmt and spec.g_kind == "full"
+                    else jnp.zeros(lead + sg, jnp.float32))
     return out
 
 
+def _acc_shape(acc):
+    """Residual-friendly shape of one accumulator: a plain tuple, or a
+    {"payload", "scale"} dict of tuples for wire-format capture."""
+    if isinstance(acc, dict):
+        return {k: v.shape for k, v in acc.items()}
+    return acc.shape
+
+
 def _stat_sum(x2d: jax.Array, kind: str, max_dim: int,
-              want_shape: tuple[int, ...],
-              backend: str = "auto") -> jax.Array:
+              want_shape, backend: str = "auto",
+              spec: Optional[FactorSpec] = None):
     """Raw factor sum for a token matrix (n, d), matching the dummy's shape
-    (which may include leading group axes already consumed by the caller)."""
+    (which may include leading group axes already consumed by the caller).
+    A dict ``want_shape`` requests wire-format capture: the fused
+    ``factor_sum_wire`` op returns the sym-packed fp8 payload + per-block
+    scales as the cotangent (kind is necessarily "full")."""
+    if isinstance(want_shape, dict):
+        payload, scale = kfac.factor_sum_wire(
+            x2d, max_dim, fmt=spec.wire_fmt,
+            scale_mode=spec.wire_scale_mode, backend=backend)
+        return {"payload": payload.reshape(want_shape["payload"]),
+                "scale": scale.reshape(want_shape["scale"])}
     if kind == "full":
         return kfac.factor_sum(x2d, max_dim,
                                backend=backend).reshape(want_shape)
@@ -125,7 +171,7 @@ def _dense_site(spec: FactorSpec, x, w, a_acc, g_acc):
 
 def _dense_site_fwd(spec, x, w, a_acc, g_acc):
     y = jnp.matmul(x, w)
-    return y, (x, w, a_acc.shape, g_acc.shape)
+    return y, (x, w, _acc_shape(a_acc), _acc_shape(g_acc))
 
 
 def _dense_site_bwd(spec, res, gy):
@@ -135,9 +181,11 @@ def _dense_site_bwd(spec, res, gy):
     g2d = gy.reshape(-1, d_out)
     dw = jnp.matmul(x2d.T, g2d.astype(x2d.dtype)).astype(w.dtype)
     dx = jnp.matmul(gy, w.T).astype(x.dtype)
-    da = (_stat_sum(x2d, spec.a_kind, spec.a_dim, a_shape, spec.backend)
+    da = (_stat_sum(x2d, spec.a_kind, spec.a_dim, a_shape, spec.backend,
+                    spec)
           if a_shape else jnp.zeros(a_shape))
-    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend,
+                    spec)
           if g_shape else jnp.zeros(g_shape))
     return dx, dw, da, dg
 
@@ -166,7 +214,8 @@ def _grouped_site(spec: FactorSpec, x, w, a_acc, g_acc):
 
 
 def _grouped_site_fwd(spec, x, w, a_acc, g_acc):
-    return jnp.einsum("end,edf->enf", x, w), (x, w, a_acc.shape, g_acc.shape)
+    return jnp.einsum("end,edf->enf", x, w), (x, w, _acc_shape(a_acc),
+                                              _acc_shape(g_acc))
 
 
 def _grouped_site_bwd(spec, res, gy):
@@ -174,9 +223,9 @@ def _grouped_site_bwd(spec, res, gy):
     dw = jnp.einsum("end,enf->edf", x, gy.astype(x.dtype)).astype(w.dtype)
     dx = jnp.einsum("enf,edf->end", gy, w).astype(x.dtype)
     # factor sums keep the expert axis: (E, n, d) -> (E, nb, b, b)
-    da = (_stat_sum(x, spec.a_kind, spec.a_dim, a_shape, spec.backend)
+    da = (_stat_sum(x, spec.a_kind, spec.a_dim, a_shape, spec.backend, spec)
           if a_shape else None)
-    dg = (_stat_sum(gy, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+    dg = (_stat_sum(gy, spec.g_kind, spec.g_dim, g_shape, spec.backend, spec)
           if g_shape else None)
     if da is None:
         da = jnp.zeros(a_shape)
@@ -315,7 +364,8 @@ def _embed_site(spec: FactorSpec, ids, table, a_acc, g_acc):
 
 
 def _embed_site_fwd(spec, ids, table, a_acc, g_acc):
-    return jnp.take(table, ids, axis=0), (ids, table.shape, a_acc.shape, g_acc.shape)
+    return jnp.take(table, ids, axis=0), (ids, table.shape, _acc_shape(a_acc),
+                                          _acc_shape(g_acc))
 
 
 def _embed_site_bwd(spec, res, gy):
@@ -325,7 +375,8 @@ def _embed_site_bwd(spec, res, gy):
     g2d = gy.reshape(-1, d)
     dtable = jnp.zeros(tshape, gy.dtype).at[flat_ids].add(g2d)
     da = jnp.zeros(a_shape, jnp.float32).at[flat_ids].add(1.0) if a_shape else jnp.zeros(a_shape)
-    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend)
+    dg = (_stat_sum(g2d, spec.g_kind, spec.g_dim, g_shape, spec.backend,
+                    spec)
           if g_shape else jnp.zeros(g_shape))
     dids = np.zeros(ids.shape, dtype=jax.dtypes.float0)  # int input: no tangent
     return dids, dtable, da, dg

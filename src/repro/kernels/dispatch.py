@@ -127,6 +127,53 @@ def factor_sum(x: jax.Array, max_dim: int, *,
 
 
 # ---------------------------------------------------------------------------
+# factor_sum_wire: fused factor sum + wire-format epilogue
+#   (..., n, d) -> (payload fp8 (..., nb, t=b(b+1)/2), scale f32 (..., nb))
+# The Stage-3 "fused" strategy's capture op: the pallas path emits the fp8
+# wire tile straight out of the SYRK kernel's VMEM accumulator (the raw f32
+# factor sum never reaches HBM); the ref path is the unfused composition
+# factor_sum -> sym_pack -> quantize_rows, numerically equivalent up to f32
+# accumulation order.
+# ---------------------------------------------------------------------------
+
+def _factor_sum_wire_ref(x, max_dim: int, fmt: str, scale_mode: str):
+    from repro.core import kfac
+    from repro.quant import quant
+    f = _factor_sum_ref(x, max_dim)
+    return quant.quantize_rows(kfac.sym_pack(f), fmt, scale_mode)
+
+
+def _factor_sum_wire_pallas(x, max_dim: int, fmt: str, scale_mode: str):
+    from repro.core import kfac
+    from repro.kernels import ops
+    d = x.shape[-1]
+    b = kfac.block_size(d, max_dim)
+    if b > ops.FACTOR_WIRE_MAX_DIM:
+        return _factor_sum_wire_ref(x, max_dim, fmt, scale_mode)
+    xb = kfac.block_reshape(x, d, max_dim, axis=-1)   # (..., n, nb, b)
+    xb = jnp.moveaxis(xb, -2, -3)                     # (..., nb, n, b)
+    lead = xb.shape[:-2]
+    n = xb.shape[-2]
+    flat = xb.reshape((-1, n, b))
+    payload, scale = jax.vmap(
+        lambda m: ops.kfac_factor_wire(m, fmt=fmt, scale_mode=scale_mode)
+    )(flat)
+    t = b * (b + 1) // 2
+    return payload.reshape(lead + (t,)), scale.reshape(lead)
+
+
+def factor_sum_wire(x: jax.Array, max_dim: int, *, fmt: str = "e4m3",
+                    scale_mode: str = "fp32",
+                    backend: str | None = None):
+    """Fused statistics construction: blocked factor sum emitted directly
+    in the sym-packed fp8 wire format (payload, per-block scale)."""
+    from repro.core import kfac
+    b = kfac.block_size(x.shape[-1], max_dim)
+    which = resolve(backend, b, x.shape[-2])
+    return lookup("factor_sum_wire", which)(x, max_dim, fmt, scale_mode)
+
+
+# ---------------------------------------------------------------------------
 # block_precond_left:  U[k] = Binv[k] @ W[k]
 #   binv (..., nb, b, b), w (..., nb, b, m) -> (..., nb, b, m) f32
 # ---------------------------------------------------------------------------
@@ -464,6 +511,8 @@ def swa_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
 
 register("factor_sum", "ref", _factor_sum_ref)
 register("factor_sum", "pallas", _factor_sum_pallas)
+register("factor_sum_wire", "ref", _factor_sum_wire_ref)
+register("factor_sum_wire", "pallas", _factor_sum_wire_pallas)
 register("block_precond_left", "ref", _precond_left_ref)
 register("block_precond_left", "pallas", _precond_left_pallas)
 register("block_precond_right", "ref", _precond_right_ref)

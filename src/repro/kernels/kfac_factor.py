@@ -14,6 +14,13 @@ hotspot is the construction of the statistics A, G") mapped to the TPU:
 Grid: (d/bm, d/bn, n/bk); the k axis accumulates into the (i, j) output
 tile, which Pallas keeps resident in VMEM across the k sweep (output revisit
 ordering), so each tile is written to HBM exactly once.
+
+``factor_syrk_wire`` is the fused wire-format variant (Stage-3 "fused"
+strategy): the SYRK accumulates into a f32 VMEM scratch block, and the final
+k step runs the :mod:`repro.kernels.quant_pack` epilogue in place — block
+amax, per-block scale, clip, fp8 cast — so the ONLY HBM writes are the fp8
+payload and one f32 scale. The raw f32 factor sum never round-trips HBM
+before the collective.
 """
 
 from __future__ import annotations
@@ -23,6 +30,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _factor_kernel(x_i_ref, x_j_ref, out_ref, *, n_k: int):
@@ -67,3 +75,69 @@ def factor_syrk(x: jax.Array, *, bm: int = 256, bn: int = 256,
         out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
         interpret=interpret,
     )(x, x)
+
+
+def _factor_wire_kernel(x_ref, payload_ref, scale_ref, acc_ref, *,
+                        n_k: int, fmt_max: float, pow2: bool):
+    """SYRK accumulate in VMEM scratch; quantize epilogue on the last k.
+
+    The epilogue is byte-for-byte the :mod:`quant_pack` math (explicit
+    reciprocal-multiply scale, pow2 rounding, clip before the fp8 cast) with
+    ONE scale for the whole (b, b) block — the same granularity as one
+    sym-packed row, so the emitted tile is the PR-5 wire/storage tile.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xk = x_ref[...].astype(jnp.float32)                  # (bk, b)
+    acc_ref[...] += jax.lax.dot_general(
+        xk, xk, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        f = acc_ref[...]                                 # (b, b) f32
+        amax = jnp.max(jnp.abs(f))
+        s = amax * (1.0 / fmt_max)
+        if pow2:
+            s = jnp.exp2(jnp.ceil(jnp.log2(jnp.maximum(s, 2.0 ** -126))))
+        s = jnp.where(amax > 0, s, 1.0)
+        scale_ref[0, 0] = s
+        q = jnp.clip(f / s, -fmt_max, fmt_max)   # e4m3fn overflows to NaN
+        payload_ref[...] = q.astype(payload_ref.dtype)
+
+
+def factor_syrk_wire(x: jax.Array, fp8_dtype, *, fmt_max: float,
+                     pow2: bool = False, bk: int = 512,
+                     interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (n, b) -> (payload (b, b) fp8, scale (1, 1) f32).
+
+    Single-block fused SYRK -> wire-format epilogue: the f32 accumulator
+    lives only in VMEM scratch across the k sweep; the last grid step
+    quantizes it in place. The full (b, b) fp8 block is emitted (symmetric
+    by construction); the wrapper's XLA-side ``sym_pack`` gather on the
+    1-byte payload produces the packed triangle — pure byte movement, the
+    same division of labour as the quant_pack wrappers.
+    """
+    n, b = x.shape
+    bkk = min(bk, n)
+    grid = (pl.cdiv(n, bkk),)
+    return pl.pallas_call(
+        functools.partial(_factor_wire_kernel, n_k=grid[0],
+                          fmt_max=fmt_max, pow2=pow2),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bkk, b), lambda k: (k, 0))],
+        out_specs=[
+            pl.BlockSpec((b, b), lambda k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda k: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b), fp8_dtype),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, b), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -11,6 +11,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import kfac_factor as _factor
 from repro.kernels import kfac_precond as _precond
@@ -45,6 +46,44 @@ def kfac_factor(x: jax.Array, *, bm: int = 256, bn: int = 256, bk: int = 512,
     upper = jnp.where(tr[:, None] < tr[None, :], m, 0.0)
     diag = jnp.where(tr[:, None] == tr[None, :], m, 0.0)
     return (upper + upper.T + diag)[:d, :d]
+
+
+# largest factor block the fused wire kernel keeps VMEM-resident: the f32
+# scratch accumulator costs b^2 * 4 bytes plus the fp8 payload block and one
+# (bk, b) input tile; 1024 -> ~5.7 MB against the ~16 MB/core budget.
+# Dispatch routes bigger blocks to the ref path (XLA SYRK + quantize_rows).
+FACTOR_WIRE_MAX_DIM = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "scale_mode", "bk",
+                                             "interpret"))
+def kfac_factor_wire(x: jax.Array, *, fmt: str = "e4m3",
+                     scale_mode: str = "fp32", bk: int = 512,
+                     interpret: bool | None = None):
+    """Fused factor construction + wire-format epilogue for ONE block:
+    x (n, b) -> (payload (t,) fp8 sym-packed, scale () f32).
+
+    The f32 factor sum exists only in the kernel's VMEM scratch; HBM
+    receives the fp8 block + scale, and the sym-pack below is a static
+    tril gather on 1-byte data (same row order as ``kfac.sym_pack``, so
+    the emitted tile IS the PR-5 wire/storage tile)."""
+    from repro.quant import quant as _q
+    interpret = _default_interpret() if interpret is None else interpret
+    n, b = x.shape
+    if b > FACTOR_WIRE_MAX_DIM:
+        raise ValueError(f"kfac_factor_wire holds the whole block in VMEM; "
+                         f"b={b} exceeds FACTOR_WIRE_MAX_DIM="
+                         f"{FACTOR_WIRE_MAX_DIM} (route to the ref path)")
+    bp = -(-b // 128) * 128          # lane alignment; zeros are amax-neutral
+    bkk = min(bk, n)
+    npad = -(-n // bkk) * bkk
+    if bp != b or npad != n:
+        x = jnp.pad(x, ((0, npad - n), (0, bp - b)))
+    payload, scale = _factor.factor_syrk_wire(
+        x, _q.FORMATS[fmt], fmt_max=_q.FMT_MAX[fmt],
+        pow2=(scale_mode == "pow2"), bk=bkk, interpret=interpret)
+    i, j = np.tril_indices(b)
+    return payload[:b, :b][i, j], scale[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))

@@ -89,7 +89,8 @@ def build_case(arch: str, shape_name: str, mesh, *,
                rwkv_chunk: int = 0, fast: bool = False,
                backend: str = "auto", factor_dtype: str = "f32",
                inverse_method: str = "eigh", comm_strategy: str = "dense",
-               wire_dtype: Optional[str] = None):
+               wire_dtype: Optional[str] = None,
+               devices_per_host: Optional[int] = None):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
@@ -115,6 +116,17 @@ def build_case(arch: str, shape_name: str, mesh, *,
     if rwkv_chunk:
         cfg = dataclasses.replace(cfg, scan_chunk=rwkv_chunk)
     shape = INPUT_SHAPES[shape_name]
+    comm = None
+    if schedule == "shardmap" and shape.kind == "train":
+        from repro.comm import make_comm_config
+        comm = make_comm_config(comm_strategy, wire_dtype,
+                                backend=cfg.backend,
+                                devices_per_host=devices_per_host)
+        if comm.strategy == "fused" and not fast:
+            # fused: the SYRK epilogue itself emits wire-format payloads —
+            # thread the fp8 wire format into the capture specs so the
+            # model's factor sums come out pre-packed
+            cfg = dataclasses.replace(cfg, factor_wire=comm.wire_fmt or "")
     model = DecoderLM(cfg)
     dp = shd.dp_axes(mesh)
     data_shards = 1
@@ -167,12 +179,11 @@ def build_case(arch: str, shape_name: str, mesh, *,
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
-            from repro.comm import make_comm_config
-            comm = make_comm_config(comm_strategy, wire_dtype,
-                                    backend=cfg.backend)
             if sm_manual == "all":
                 accum = max(1, shape.global_batch
                             // len(mesh.devices.flatten()))
+            if cfg.factor_wire:
+                accum = 1      # fp8 wire payloads cannot scan-accumulate
             if fast:
                 step = make_shardmap_fast_step(model, opt, mesh, accum=accum,
                                                manual_axes=sm_manual,
@@ -237,7 +248,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
              fast: bool = False, backend: str = "auto",
              factor_dtype: str = "f32",
              inverse_method: str = "eigh", comm_strategy: str = "dense",
-             wire_dtype: Optional[str] = None) -> dict:
+             wire_dtype: Optional[str] = None,
+             devices_per_host: Optional[int] = None) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
@@ -253,13 +265,19 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                 arch, shape_name, mesh, schedule=schedule, tp_align=tp_align,
                 rwkv_chunk=rwkv_chunk, fast=fast, backend=backend,
                 factor_dtype=factor_dtype, inverse_method=inverse_method,
-                comm_strategy=comm_strategy, wire_dtype=wire_dtype)
+                comm_strategy=comm_strategy, wire_dtype=wire_dtype,
+                devices_per_host=devices_per_host)
             reducer = getattr(step, "reducer", None)
             if reducer is not None:
                 rec["comm"] = reducer.scatter_report()
                 if reducer.template is not None:
                     rec["comm"]["wire_bytes_per_refresh"] = sum(
                         reducer.wire_bytes_per_stat().values())
+                    levels = reducer.wire_bytes_per_stat_levels().values()
+                    rec["comm"]["wire_intra_bytes_per_refresh"] = sum(
+                        intra for intra, _ in levels)
+                    rec["comm"]["wire_inter_bytes_per_refresh"] = sum(
+                        inter for _, inter in levels)
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
@@ -363,12 +381,18 @@ def main():
     ap.add_argument("--comm-strategy", default="dense", choices=STRATEGIES,
                     help="Stage-3 factor reduce under --schedule shardmap "
                          "(repro.comm): dense psum_scatter, ring "
-                         "reduce-scatter over sym-packed triangles, or "
-                         "ring_fp8 fp8-wire hops")
+                         "reduce-scatter over sym-packed triangles, "
+                         "ring_fp8 fp8-wire hops, hier (two-level "
+                         "intra-host/inter-host reduce), or fused "
+                         "(pre-packed payloads from the SYRK epilogue)")
     ap.add_argument("--wire-dtype", default=None,
                     choices=sorted(WIRE_DTYPES),
                     help="collective wire dtype; defaults to f32 for "
-                         "dense/ring, fp8_e4m3 for ring_fp8")
+                         "dense/ring, fp8_e4m3 for ring_fp8/hier/fused")
+    ap.add_argument("--devices-per-host", type=int, default=None,
+                    help="hier host-topology model: width of the "
+                         "full-precision intra-host level (default: "
+                         "jax.local_device_count())")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -397,6 +421,8 @@ def main():
         variant += f"__{args.comm_strategy}"
         if args.wire_dtype:
             variant += f"__{args.wire_dtype}"
+        if args.devices_per_host:
+            variant += f"__dph{args.devices_per_host}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -421,7 +447,8 @@ def main():
                                factor_dtype=args.factor_dtype,
                                inverse_method=args.inverse_method,
                                comm_strategy=args.comm_strategy,
-                               wire_dtype=args.wire_dtype)
+                               wire_dtype=args.wire_dtype,
+                               devices_per_host=args.devices_per_host)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -24,7 +24,28 @@ from repro.core.ngd import SPNGD
 from repro.launch import compat
 
 
+def _check_accum_capture(opt: SPNGD, accum: int) -> None:
+    """Fused wire-format capture (FactorSpec.wire_fmt) emits fp8 payloads
+    whose microbatch sums are NOT representable (fp8 has no add); refuse
+    the scan-accumulation schedules up front instead of silently adding
+    quantized payloads."""
+    if accum <= 1:
+        return
+    from repro import quant
+    template = jax.eval_shape(opt.fstats_fn)
+    wired = [f"{fam}.{k}" for fam, stats in template.items()
+             for k, leaf in stats.items() if quant.is_wire(leaf)]
+    if wired:
+        raise ValueError(
+            f"accum={accum} cannot accumulate wire-format statistics "
+            f"({', '.join(sorted(wired))}): fp8 payloads do not add across "
+            "microbatches. Use accum=1 with fused capture, or dense "
+            "capture (FactorSpec.wire_fmt='') with accumulation.")
+
+
 def make_train_step(model, opt: SPNGD, accum: int = 1) -> Callable:
+    _check_accum_capture(opt, accum)
+
     def train_step(params, opt_state, batch, flags, lam, lr, mom):
         counts = model.site_counts(batch)          # full-batch counts
 
@@ -117,6 +138,7 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
     from jax.sharding import PartitionSpec as P
 
     from repro.comm import FactorReducer
+    _check_accum_capture(opt, accum)
     reducer = FactorReducer(mesh, manual_axes=manual_axes, comm=comm,
                             template=jax.eval_shape(opt.fstats_fn),
                             sym_fn=opt.sym_stat)
@@ -151,8 +173,18 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
                              grads)
         g_scale = 1.0 / (accum * accum * ndev * ndev)
         # undo local-mean-loss scaling BEFORE the reduce (the fp8 wire
-        # quantizes what actually travels)
-        raw = {fam: {k: (v if k == "a" else v * g_scale)
+        # quantizes what actually travels). Fused wire-format capture
+        # already quantized the payload — rescale its per-block scales
+        # instead, which is mathematically exact.
+        from repro import quant
+
+        def _rescale_g(v):
+            if quant.is_wire(v):
+                return {"payload": v["payload"],
+                        "scale": v["scale"] * g_scale}
+            return v * g_scale
+
+        raw = {fam: {k: (v if k == "a" else _rescale_g(v))
                      for k, v in stats.items()}
                for fam, stats in raw.items()}
         return loss, grads, reducer.reduce(raw)
@@ -286,17 +318,24 @@ def main():
                     choices=comm_lib.STRATEGIES,
                     help="Stage-3 factor reduce strategy (repro.comm): "
                          "dense psum_scatter (bit-compatible default), ring "
-                         "reduce-scatter over sym-packed triangles, or "
+                         "reduce-scatter over sym-packed triangles, "
                          "ring_fp8 (fp8 wire payloads + per-block scales, "
-                         "f32 accumulation per hop). This single-process "
-                         "CLI runs the jit schedule (no collectives) — the "
-                         "flag here MODELS the wire ledger; the collective "
-                         "itself runs under make_shardmap_train_step "
+                         "f32 accumulation per hop), hier (intra-host f32 "
+                         "psum_scatter + inter-host fp8 ring), or fused "
+                         "(wire-format payloads emitted by the SYRK "
+                         "epilogue). This single-process CLI runs the jit "
+                         "schedule (no collectives) — the flag here MODELS "
+                         "the wire ledger; the collective itself runs under "
+                         "make_shardmap_train_step "
                          "(repro.launch.dryrun --schedule shardmap)")
     ap.add_argument("--wire-dtype", default=None,
                     choices=sorted(comm_lib.WIRE_DTYPES),
                     help="collective wire dtype; defaults to f32 for "
-                         "dense/ring and fp8_e4m3 for ring_fp8")
+                         "dense/ring and fp8_e4m3 for ring_fp8/hier/fused")
+    ap.add_argument("--devices-per-host", type=int, default=None,
+                    help="host-topology model for the hier strategy: group "
+                         "size of the full-precision intra-host level "
+                         "(default: jax.local_device_count())")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
@@ -321,10 +360,13 @@ def main():
                           factor_dtype=FACTOR_DTYPES[args.factor_dtype]))
     state = opt.init(params)
     comm_cfg = comm_lib.make_comm_config(args.comm_strategy, args.wire_dtype,
-                                         backend=args.backend)
+                                         backend=args.backend,
+                                         devices_per_host=args.devices_per_host)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
                               bytes_per_stat=opt.stat_bytes(),
-                              wire_bytes_per_stat=opt.wire_bytes(comm_cfg))
+                              wire_bytes_per_stat=opt.wire_bytes(comm_cfg),
+                              wire_level_bytes_per_stat=opt.wire_level_bytes(
+                                  comm_cfg))
     ctrl.record_comm({"strategy": comm_cfg.strategy,
                       "wire_dtype": comm_cfg.wire_dtype})
     data = token_batches(cfg.vocab, args.batch, args.seq, seed=0)

@@ -45,13 +45,16 @@ class DecoderLM:
         self.act_hook = None
         # Optional MoE dispatch-buffer sharding constraint (launch layer).
         self.moe_hook = None
-        self.spec = FactorSpec(max_dim=cfg.kfac_max_dim, backend=cfg.backend)
+        self.spec = FactorSpec(max_dim=cfg.kfac_max_dim, backend=cfg.backend,
+                               wire_fmt=cfg.factor_wire)
         self.head_spec = FactorSpec(g_kind=cfg.head_g_kind,
                                     max_dim=cfg.kfac_max_dim,
-                                    backend=cfg.backend)
+                                    backend=cfg.backend,
+                                    wire_fmt=cfg.factor_wire)
         self.embed_spec = FactorSpec(a_kind="diag", g_kind="full",
                                      max_dim=cfg.kfac_max_dim,
-                                     backend=cfg.backend)
+                                     backend=cfg.backend,
+                                     wire_fmt=cfg.factor_wire)
         self.specs = self._block_site_specs()
 
     def _tp_spec(self, d_in: int, d_out: int, *, a_tp: bool = False,
@@ -80,7 +83,7 @@ class DecoderLM:
         a_max = aligned(d_in) if (tp and a_tp) else 0
         g_max = aligned(d_out) if (tp and g_tp) else 0
         return FactorSpec(max_dim=cfg.kfac_max_dim, a_max=a_max, g_max=g_max,
-                          backend=cfg.backend)
+                          backend=cfg.backend, wire_fmt=cfg.factor_wire)
 
     def _spec_sub(self, prefix: str) -> dict:
         return {k[len(prefix):]: v for k, v in self.specs.items()

@@ -2,9 +2,12 @@ from repro.quant.quant import (FORMATS, FMT_MAX, FACTOR_DTYPES,
                                PAYLOAD_BYTES, SCALE_BYTES,
                                parse_factor_dtype, compute_scale,
                                quantize_rows, dequantize_rows,
-                               encode_stat, decode_stat, encoded_nbytes)
+                               encode_stat, decode_stat, encoded_nbytes,
+                               is_wire, tri_rows, wire_dense_shape,
+                               decode_wire_stat)
 
 __all__ = ["FORMATS", "FMT_MAX", "FACTOR_DTYPES", "PAYLOAD_BYTES",
            "SCALE_BYTES", "parse_factor_dtype", "compute_scale",
            "quantize_rows", "dequantize_rows",
-           "encode_stat", "decode_stat", "encoded_nbytes"]
+           "encode_stat", "decode_stat", "encoded_nbytes",
+           "is_wire", "tri_rows", "wire_dense_shape", "decode_wire_stat"]

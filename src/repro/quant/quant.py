@@ -155,6 +155,40 @@ def decode_stat(entry: dict, shape: tuple, *,
     return dequantize_rows(entry["payload"], entry["scale"])
 
 
+def is_wire(x: Any) -> bool:
+    """Whether ``x`` is a wire-format stat: the ``{"payload", "scale"}``
+    dict produced by the fused SYRK epilogue (``factor_sum_wire``) / by
+    :func:`quantize_rows` — fp8 sym-packed rows + per-block f32 scales."""
+    return isinstance(x, dict) and "payload" in x and "scale" in x
+
+
+def tri_rows(t: int) -> int:
+    """Inverse of the triangle count: ``t = b(b+1)/2 -> b``."""
+    import math
+    b = (math.isqrt(8 * t + 1) - 1) // 2
+    if b * (b + 1) // 2 != t:
+        raise ValueError(f"{t} is not a triangular number (not a sym-packed "
+                         "row length)")
+    return b
+
+
+def wire_dense_shape(entry: dict) -> tuple:
+    """Dense f32 shape a wire-format stat decodes to:
+    payload (lead..., nb, t) -> (lead..., nb, b, b)."""
+    p = entry["payload"]
+    b = tri_rows(p.shape[-1])
+    return tuple(p.shape[:-1]) + (b, b)
+
+
+def decode_wire_stat(entry: dict) -> jax.Array:
+    """Wire-format stat -> dense symmetric f32 blocks (one dequant, the
+    jit-schedule counterpart of the reducer's post-collective decode)."""
+    b = tri_rows(entry["payload"].shape[-1])
+    from repro.core import kfac
+    return kfac.sym_unpack(dequantize_rows(entry["payload"], entry["scale"]),
+                           b)
+
+
 def encoded_nbytes(shape: tuple, symmetric: Optional[bool] = None) -> int:
     """Resident bytes of the encoded form of a stat of ``shape``
     (fp8 payload + f32 per-block scales; sym-packed when symmetric)."""
