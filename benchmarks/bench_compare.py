@@ -1,7 +1,7 @@
 """Diff two BENCH_kernels.json snapshots and flag wall-clock regressions.
 
     PYTHONPATH=src python -m benchmarks.bench_compare OLD.json NEW.json \
-        [--threshold 0.25] [--rows 'comm.*'] [--metric us]
+        [--threshold 0.25] [--rows 'comm.*,stage4.*'] [--metric us]
 
 For every row present in both snapshots, prints the old/new value of the
 timing metric and the ratio new/old; rows whose ratio exceeds
@@ -30,6 +30,14 @@ _TIMING_FIELDS = ("us",)
 _RATIO_FIELDS = ("us_ratio", "ratio", "flops_ratio", "wire_ratio")
 
 
+def _match(name: str, rows: str) -> bool:
+    """fnmatch against a COMMA-SEPARATED list of globs — fnmatch has no
+    '{a,b}' brace expansion, and the CI gate spans several row families
+    (comm.*, damped_inverse.*, stage4.*) in one invocation."""
+    return any(fnmatch.fnmatch(name, pat)
+               for pat in rows.split(",") if pat)
+
+
 def load_results(path: str) -> dict:
     with open(path) as f:
         rec = json.load(f)
@@ -56,7 +64,7 @@ def compare(old: dict, new: dict, threshold: float, rows: str,
     """Returns (report_lines, regressed_names)."""
     lines, regressed = [], []
     names = sorted(set(old) & set(new))
-    matched = [n for n in names if fnmatch.fnmatch(n, rows)]
+    matched = [n for n in names if _match(n, rows)]
     for name in matched:
         mo = _metric(old[name], metric)
         mn = _metric(new[name], metric)
@@ -78,7 +86,7 @@ def compare(old: dict, new: dict, threshold: float, rows: str,
         if bad:
             regressed.append(name)
     dropped = [n for n in sorted(set(old) - set(new))
-               if fnmatch.fnmatch(n, rows)]
+               if _match(n, rows)]
     for name in dropped:
         lines.append(f"{name:40s} MISSING from new snapshot")
     return lines, regressed
@@ -93,7 +101,8 @@ def main(argv=None) -> int:
                     help="allowed fractional growth before a row is a "
                          "regression (default 0.25 = +25%%)")
     ap.add_argument("--rows", default="*",
-                    help="glob over row names (e.g. 'comm.*')")
+                    help="comma-separated globs over row names "
+                         "(e.g. 'comm.*,damped_inverse.*,stage4.*')")
     ap.add_argument("--metric", default="auto",
                     help="force one field (e.g. us, wire_bytes) instead of "
                          "the auto timing/ratio pick")

@@ -159,13 +159,13 @@ def _bench_damped_inverse(quick: bool):
     return out
 
 
-def _bench_comm(quick: bool):
-    """Stage-3 strategy A/B (repro.comm), run in a SUBPROCESS with 8
-    virtual CPU devices so the ring is a real multi-device collective —
-    setting the device count in this process would oversubscribe the CPU
-    and skew every other benchmark row's timing (the cross-PR A/B ratios
-    in BENCH_kernels.json must stay comparable). Falls back to an
-    in-process run on whatever devices exist if the subprocess fails."""
+def _bench_in_subprocess(flag: str, local_fn, quick: bool, what: str):
+    """Run a multi-device A/B body in a SUBPROCESS with 8 virtual CPU
+    devices so the collectives are real multi-device programs — setting the
+    device count in this process would oversubscribe the CPU and skew every
+    other benchmark row's timing (the cross-PR A/B ratios in
+    BENCH_kernels.json must stay comparable). Falls back to an in-process
+    run on whatever devices exist if the subprocess fails."""
     import json
     import subprocess
     import sys
@@ -180,13 +180,26 @@ def _bench_comm(quick: bool):
     try:
         proc = subprocess.run(
             [sys.executable, "-m", "benchmarks.kernels_bench",
-             "--comm-json"] + (["--quick"] if quick else []),
+             flag] + (["--quick"] if quick else []),
             env=env, cwd=root, capture_output=True, text=True, check=True)
         return json.loads(proc.stdout.splitlines()[-1])
     except (subprocess.CalledProcessError, ValueError, IndexError) as e:
-        print(f"# comm A/B subprocess failed ({e}); running in-process on "
+        print(f"# {what} A/B subprocess failed ({e}); running in-process on "
               f"{len(jax.devices())} device(s)", file=sys.stderr)
-        return _bench_comm_local(quick)
+        return local_fn(quick)
+
+
+def _bench_comm(quick: bool):
+    """Stage-3 strategy A/B (repro.comm) on 8 virtual devices."""
+    return _bench_in_subprocess("--comm-json", _bench_comm_local, quick,
+                                "comm")
+
+
+def _bench_stage4(quick: bool):
+    """Stage-4 refresh A/B (replicated vs sharded inversion) on 8 virtual
+    devices."""
+    return _bench_in_subprocess("--stage4-json", _bench_stage4_local, quick,
+                                "stage4")
 
 
 def _bench_comm_local(quick: bool):
@@ -316,6 +329,68 @@ def _bench_comm_local(quick: bool):
     return out
 
 
+def _bench_stage4_local(quick: bool):
+    """The Stage-4 A/B body: invert one scattered stack of SPD factor
+    blocks with the pre-PR-7 refresh (every device redundantly inverts the
+    FULL stack — modelled as a shard_map over a replicated operand, which
+    is exactly what the monolithic refresh compiled to) vs the sharded
+    ``Stage4Inverter`` refresh (each device inverts only its
+    ``FactorReducer``-owned chunk, then all-gathers the sym-packed f32
+    preconditioners). The wall-clock ratio is the acceptance gauge: the
+    sharded refresh does 1/p of the eigh work per device, so it must come
+    in well under the replicated baseline even after paying for the
+    gather. Returns {name: rec}."""
+    import functools
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.comm import FactorReducer, Stage4Inverter, make_comm_config
+    from repro.kernels import dispatch
+    from repro.launch import compat
+
+    ndev = len(jax.devices())
+    mesh = compat.make_mesh((ndev,), ("data",))
+    lead, b = (ndev, 48) if quick else (2 * ndev, 96)
+    rng = np.random.RandomState(0)
+    q = np.linalg.qr(rng.randn(lead, b, b))[0]
+    lam = np.logspace(0, -3, b)                       # damped kappa ~1e3
+    f = jnp.asarray(np.einsum("kab,b,kcb->kac", q, lam, q), jnp.float32)
+    damp = jnp.full((lead,), 1e-3, jnp.float32)
+
+    template = {"fam": {"a": jax.ShapeDtypeStruct((lead, b, b),
+                                                  jnp.float32)}}
+    red = FactorReducer(mesh, comm=make_comm_config("dense"),
+                        template=template, sym_fn=lambda fam, key: True)
+    inv4 = Stage4Inverter(red, method="eigh", backend="ref")
+
+    def repl_body(s, d):
+        # d (lead,) already matches the 3-D stat's batch dims
+        return dispatch.damped_inverse(s, d, method="eigh", backend="ref")
+
+    repl = jax.jit(compat.shard_map(
+        repl_body, mesh=mesh, in_specs=(P(), P()), out_specs=P(),
+        axis_names={"data"}))
+    shard = jax.jit(functools.partial(inv4.invert, fam="fam", key="a"))
+
+    t_repl = time_fn(repl, f, damp, warmup=1, iters=3)
+    t_shard = time_fn(shard, f, damp, warmup=1, iters=3)
+    err = float(jnp.max(jnp.abs(shard(f, damp) - repl(f, damp))))
+    gather = sum(red.gather_bytes_per_stat().values())
+    return {
+        "stage4.refresh_replicated": {"us": t_repl, "devices": ndev},
+        "stage4.refresh_sharded": {"us": t_shard, "devices": ndev,
+                                   "gather_bytes": gather,
+                                   "maxerr_vs_replicated": err},
+        # acceptance gauge: sharded refresh wall clock < 0.6x replicated
+        "stage4.sharded_over_replicated": {
+            "us_ratio": t_shard / t_repl,
+            "devices": ndev,
+            "gather_bytes": gather,
+            "maxerr": err,
+        },
+    }
+
+
 def run(quick: bool = False):
     out = []
     LAST_RESULTS.clear()
@@ -402,6 +477,18 @@ def run(quick: bool = False):
     out.append(row("damped_inverse.ns_over_eigh", 0.0,
                    f"us_ratio={di['newton_schulz']['us'] / di['eigh']['us']:.2f}"))
 
+    # ---- Stage-4 distribution A/B: replicated vs sharded refresh ----
+    s4 = _bench_stage4(quick)
+    for name, rec in s4.items():
+        LAST_RESULTS[name] = rec
+        if "us_ratio" in rec:
+            extra = f"us_ratio={rec['us_ratio']:.3f}"
+        elif "maxerr_vs_replicated" in rec:
+            extra = f"maxerr={rec['maxerr_vs_replicated']:.2e}"
+        else:
+            extra = f"devices={rec['devices']}"
+        out.append(row(name, rec.get("us", 0.0), extra))
+
     # ---- Stage-3 comm strategy A/B: dense vs ring vs ring_fp8 ----
     cm = _bench_comm(quick)
     for name, rec in cm.items():
@@ -449,6 +536,9 @@ if __name__ == "__main__":
         # last stdout line (the parent parses it)
         import json
         print(json.dumps(_bench_comm_local(quick="--quick" in sys.argv)))
+    elif "--stage4-json" in sys.argv:
+        import json
+        print(json.dumps(_bench_stage4_local(quick="--quick" in sys.argv)))
     else:
         for r in run():
             print(r)

@@ -88,6 +88,43 @@ def comm_volume_section():
               "stale_reduction` for the intra-/inter-host split._\n")
 
 
+def stage4_section(ok):
+    """§Stage-4 inversion distribution from the dry-run records' stage4
+    reports (per-layer inverse timing + gather bytes, dryrun
+    --inverse-sharding)."""
+    print("### Stage-4 inversion distribution\n")
+    recs = [r for r in ok if r.get("stage4", {}).get("stats")]
+    if not recs:
+        print("_No dry-run record carries a Stage-4 report (pre-PR-7 "
+              "records, or no `--schedule shardmap` train case was run); "
+              "regenerate with `PYTHONPATH=src python -m repro.launch.dryrun "
+              "--schedule shardmap --inverse-sharding`._\n")
+        return
+    if not any(r["stage4"]["inverse_sharding"] for r in recs):
+        print("_Only replicated Stage-4 runs exist (every device redundantly "
+              "inverts every factor, gather bytes 0); rerun with "
+              "`--inverse-sharding` for the sharded refresh numbers._\n")
+    print("| arch | shape | mode | stat | layers | group | us/layer "
+          "| us/dev repl | us/dev sharded | gather |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        s4 = r["stage4"]
+        mode = "sharded" if s4["inverse_sharding"] else "replicated"
+        for name, st in sorted(s4["stats"].items()):
+            print(f"| {r['arch']} | {r['shape']} | {mode} | {name} "
+                  f"| {st['layers']} | {st['group']} "
+                  f"| {fmt_s(st['us_per_layer'] * 1e-6)} "
+                  f"| {fmt_s(st['replicated_us_per_device'] * 1e-6)} "
+                  f"| {fmt_s(st['sharded_us_per_device'] * 1e-6)} "
+                  f"| {fmt_bytes(st['gather_bytes'])} |")
+    print("\n_us/layer is a measured single-slice inversion with the "
+          "configured method on the dry-run host; the per-device columns "
+          "scale it by the layer count and the reducer's scatter group "
+          "(ownership rule of `repro.comm.Stage4Inverter`). The gather "
+          "column is the sym-packed f32 preconditioner all-gather per "
+          "refresh — zero on replicated runs, which gather nothing._\n")
+
+
 def main():
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
@@ -161,6 +198,7 @@ def main():
                       f"| {fmt_bytes(r2['collective_bytes'])} | {ratio:.2f}x |")
 
     print()
+    stage4_section(ok)
     comm_volume_section()
 
 

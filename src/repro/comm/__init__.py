@@ -1,11 +1,15 @@
-"""Stage-3 communication subsystem (see :mod:`repro.comm.comm`)."""
+"""Stage-3/4 communication subsystem (see :mod:`repro.comm.comm` and
+:mod:`repro.comm.stage4`)."""
 
 from repro.comm.comm import (CommConfig, FactorReducer, STRATEGIES,
-                             WIRE_DTYPES, hier_split, make_comm_config,
+                             WIRE_DTYPES, gather_stat_bytes, hier_split,
+                             make_comm_config, template_gather_bytes,
                              template_wire_bytes, template_wire_level_bytes,
                              wire_stat_bytes, wire_stat_level_bytes)
+from repro.comm.stage4 import Stage4Inverter
 
-__all__ = ["CommConfig", "FactorReducer", "STRATEGIES", "WIRE_DTYPES",
-           "hier_split", "make_comm_config", "template_wire_bytes",
-           "template_wire_level_bytes", "wire_stat_bytes",
-           "wire_stat_level_bytes"]
+__all__ = ["CommConfig", "FactorReducer", "STRATEGIES", "Stage4Inverter",
+           "WIRE_DTYPES", "gather_stat_bytes", "hier_split",
+           "make_comm_config", "template_gather_bytes",
+           "template_wire_bytes", "template_wire_level_bytes",
+           "wire_stat_bytes", "wire_stat_level_bytes"]

@@ -70,6 +70,22 @@ reduce-scatter implementation and is deliberately left out. Under ``hier``
 the per-level breakdown prices level 1 at the full (packed) f32 array and
 level 2 at 1/D of the wire-encoded array (each device enters the inter-host
 ring holding only its 1/D slice); flat strategies report (0, 0) levels.
+
+Stage-4 gather
+--------------
+The reducer also owns the return leg: under sharded Stage-4
+(:class:`repro.comm.stage4.Stage4Inverter`) each device inverts only the
+factor chunk the reduce-scatter left it with, and the preconditioners come
+back via :meth:`FactorReducer.gather_stat` — an ``all_gather(tiled=True)``
+over the SAME axes the statistic scattered over, so ownership is
+strategy-invariant by construction. Symmetric factors gather as sym-packed
+f32 triangles. The gather wire NEVER quantizes, regardless of
+``wire_dtype``: inverse-factor rounding error feeds straight into the
+update direction (there is no later accumulation to average it out), so
+fp8 is reserved for the Stage-3 statistics leg.
+``gather_stat_bytes`` / :meth:`FactorReducer.gather_bytes_per_stat` price
+this leg for the IntervalController ledger (0 for replicated stats — no
+gather runs).
 """
 
 from __future__ import annotations
@@ -255,6 +271,44 @@ def wire_stat_bytes(shape: tuple, symmetric: bool, cfg: CommConfig,
     return quant.encoded_nbytes(shape, symmetric=True)
 
 
+def gather_stat_bytes(shape: tuple, symmetric: bool,
+                      scattered: bool = True) -> int:
+    """Bytes one Stage-4 preconditioner all-gather moves per device.
+
+    Symmetric blocked inverses travel as sym-packed f32 triangles (the
+    ``gather_stat`` wire format); anything else travels dense f32. Always
+    f32 — the inverse wire never quantizes (see module docs). A replicated
+    statistic was inverted everywhere, so nothing gathers (0 bytes)."""
+    from repro.core.stale import sym_packed_bytes
+    if not scattered:
+        return 0
+    if symmetric and len(shape) >= 2 and shape[-1] == shape[-2]:
+        return sym_packed_bytes(shape, dtype_bytes=4)
+    return int(np.prod(shape, dtype=np.int64)) * 4
+
+
+def template_gather_bytes(template: dict,
+                          sym_fn: Callable[[str, str], bool],
+                          scattered_fn: Optional[Callable] = None
+                          ) -> dict[str, int]:
+    """Per-statistic Stage-4 gather bytes for a whole ``fstats`` template —
+    the gather-leg counterpart of :func:`template_wire_bytes` (mesh-less:
+    assumes everything scatters unless ``scattered_fn`` says otherwise).
+    Only full-kind Kronecker factors (symmetric "a"/"g" stats) are inverted
+    shard-locally and gathered; every other statistic prices 0."""
+    out = {}
+    for fam, stats in template.items():
+        for key, leaf in stats.items():
+            name = f"{fam}.{key}"
+            if key not in ("a", "g") or not sym_fn(fam, key):
+                out[name] = 0
+                continue
+            scattered = scattered_fn(name) if scattered_fn else True
+            out[name] = gather_stat_bytes(_leaf_shape(leaf), True,
+                                          scattered=scattered)
+    return out
+
+
 def wire_stat_level_bytes(shape: tuple, symmetric: bool, cfg: CommConfig,
                           scattered: bool = True,
                           group_size: Optional[int] = None
@@ -413,6 +467,26 @@ class FactorReducer:
                     group_size=self.group_size(axes) if axes else None)
         return out
 
+    def gather_bytes_per_stat(self) -> dict[str, int]:
+        """Per-refresh Stage-4 all-gather bytes per statistic under this
+        reducer's ACTUAL scatter decisions (a replication fallback never
+        gathers: the inverse was computed everywhere). Nonzero only for the
+        full-kind symmetric "a"/"g" factors that Stage-4 shards."""
+        if self.template is None:
+            raise ValueError("FactorReducer needs a template for gather "
+                             "bytes")
+        out = {}
+        for fam, stats in self.template.items():
+            for key, leaf in stats.items():
+                name = f"{fam}.{key}"
+                if key not in ("a", "g") or not self.sym_fn(fam, key):
+                    out[name] = 0
+                    continue
+                axes = self._decisions.get(name, ())
+                out[name] = gather_stat_bytes(_leaf_shape(leaf), True,
+                                              scattered=bool(axes))
+        return out
+
     def wire_bytes_per_stat_levels(self) -> dict[str, tuple[int, int]]:
         """Per-refresh (intra-host, inter-host) wire bytes per statistic —
         the level breakdown behind the IntervalController's hier ledger
@@ -466,6 +540,28 @@ class FactorReducer:
         return {fam: {k: self.reduce_stat(fam, k, v)
                       for k, v in stats.items()}
                 for fam, stats in raw.items()}
+
+    def gather_stat(self, fam: str, key: str, v: jax.Array,
+                    axes: tuple) -> jax.Array:
+        """Stage-4 return leg: all-gather a shard-local preconditioner back
+        to the full leading dim, over the SAME ``axes`` its statistic
+        scattered over (pass the host-side decision — inside the manual
+        region ``v.shape[0]`` is the shard size, so the decision cannot be
+        recomputed here). Symmetric blocks move the sym-packed f32 triangle
+        on the wire; the gather never quantizes (module docs). Chunk order
+        matches ``psum_scatter(tiled=True)`` ownership, so gather(invert(
+        scatter(x))) is a layout round-trip for every strategy."""
+        from repro.core import kfac
+        if not axes:
+            return v
+        sym = self.sym_fn(fam, key) and v.ndim >= 3 \
+            and v.shape[-1] == v.shape[-2]
+        b = v.shape[-1] if sym else 0
+        if sym:
+            v = kfac.sym_pack(v.astype(jnp.float32))   # wire = triangle only
+        an = axes if len(axes) > 1 else axes[0]
+        v = jax.lax.all_gather(v, an, axis=0, tiled=True)
+        return kfac.sym_unpack(v, b) if sym else v
 
     # ---- the ring ----
 

@@ -55,6 +55,21 @@ class NGDConfig:
     backend: str = "auto"            # kernel backend for the hot paths
                                      # ("ref" | "pallas" | "auto";
                                      #  repro.kernels.dispatch)
+    inverse_sharding: bool = False   # Stage-4 distribution: each device
+                                     # inverts only its FactorReducer-owned
+                                     # chunk of every full-kind factor and
+                                     # the preconditioners all-gather
+                                     # (repro.comm.stage4). Takes effect
+                                     # under the shard_map schedule, which
+                                     # attaches the Stage4Inverter; the jit
+                                     # schedule ignores it (replicated).
+    double_buffer: bool = False      # pipeline refreshes behind training
+                                     # compute: inverses produced by the
+                                     # refresh at step t are STAGED and
+                                     # activate at t+1.., while step t
+                                     # still consumes the previous buffer
+                                     # (paper §5.2 overlap; the staleness
+                                     # itself is still Algorithm 2's)
 
 
 def _dense_leaf_shape(leaf) -> tuple:
@@ -101,8 +116,18 @@ class SPNGD:
         self.counts_fn = counts_fn
         self.cfg = cfg
         self.sharding_hook = sharding_hook or (lambda fam, key, x: x)
+        self.stage4 = None            # Stage4Inverter, set by the shard_map
+                                      # step builder (set_stage4)
         from repro.quant import parse_factor_dtype
         self._fp8 = parse_factor_dtype(cfg.factor_dtype)  # fmt key or None
+
+    def set_stage4(self, inverter) -> None:
+        """Attach (or detach, with None) a
+        :class:`repro.comm.Stage4Inverter`: full-kind factor inverses then
+        run shard-locally over the reducer's chunk layout and all-gather.
+        The step builder calls this when ``cfg.inverse_sharding`` is on —
+        the optimizer itself stays schedule-agnostic."""
+        self.stage4 = inverter
 
     def sym_stat(self, fam: str, key: str) -> bool:
         """Whether a stat is a symmetric blocked factor (sym-packable) —
@@ -184,6 +209,19 @@ class SPNGD:
             jax.eval_shape(self.fstats_fn), self.sym_stat,
             comm or comm_mod.CommConfig(), group_size=group_size)
 
+    def gather_bytes(self) -> dict[str, int]:
+        """Per-statistic Stage-4 preconditioner all-gather payload — the
+        gather column of the IntervalController ledger when
+        ``cfg.inverse_sharding`` distributes the inversions. Sym-packed f32
+        triangles for the full-kind factors, 0 for everything else (only
+        sharded inverses gather; the wire never quantizes). Mesh-less
+        everything-scatters assumption, like :meth:`wire_bytes`; a
+        mesh-specific reducer's ``gather_bytes_per_stat()`` additionally
+        zeroes replication fallbacks."""
+        from repro import comm as comm_mod
+        return comm_mod.template_gather_bytes(
+            jax.eval_shape(self.fstats_fn), self.sym_stat)
+
     def wire_level_bytes(self, comm=None,
                          group_size=None) -> dict[str, tuple[int, int]]:
         """Per-statistic (intra-host, inter-host) Stage-3 wire bytes — the
@@ -222,6 +260,11 @@ class SPNGD:
                         entry["precond"][key] = jnp.ones(shape, jnp.float32)
                 else:                       # "d" (bias) / "uw" (2x2): store stats
                     entry["precond"][key] = jnp.zeros(shape, jnp.float32)
+            if self.cfg.double_buffer:
+                # staged buffer: what the NEXT step will activate. Seeding
+                # it from the active init makes step 1 a plain identity-
+                # preconditioned step (the pipeline's one-step warm-up).
+                entry["precond_next"] = dict(entry["precond"])
             curv[fam] = entry
         return {
             "step": jnp.zeros((), jnp.int32),
@@ -298,13 +341,11 @@ class SPNGD:
                                   else g.shape[:len(info.lead)])
                 sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
                 if a is not None:
-                    pc["a"] = _damped_inv(a, info.spec.a_kind, pi * sl,
-                                          cfg.inverse_method, cfg.backend,
-                                          cfg.ns_iters, cfg.ns_tol)
+                    pc["a"] = self._stat_inverse(fam, "a", a,
+                                                 info.spec.a_kind, pi * sl)
                 if g is not None:
-                    pc["g"] = _damped_inv(g, info.spec.g_kind, sl / pi,
-                                          cfg.inverse_method, cfg.backend,
-                                          cfg.ns_iters, cfg.ns_tol)
+                    pc["g"] = self._stat_inverse(fam, "g", g,
+                                                 info.spec.g_kind, sl / pi)
             for key in ("d", "uw"):
                 if key in normalized:
                     pc[key] = normalized[key]
@@ -315,15 +356,34 @@ class SPNGD:
             return pc
 
         def keep(_):
-            return curv["precond"]
+            return curv["precond_next" if cfg.double_buffer else "precond"]
 
         precond = jax.lax.cond(any_flag, recompute, keep, None)
-        out = {"prev": new_prev, "precond": precond}
+        if cfg.double_buffer:
+            # pipeline: the fresh inverses are STAGED (precond_next) and the
+            # buffer staged by the latest earlier refresh activates for this
+            # step — refresh at t produces inverses consumed from t+1 on
+            out = {"prev": new_prev, "precond": curv["precond_next"],
+                   "precond_next": precond}
+        else:
+            out = {"prev": new_prev, "precond": precond}
         if cfg.history >= 2:
             out["prev2"] = new_prev2
         else:
             out["prev2"] = curv["prev2"]
         return out, sims
+
+    def _stat_inverse(self, fam: str, key: str, stat: jax.Array, kind: str,
+                      damp: jax.Array) -> jax.Array:
+        """One factor's Stage-4 inverse: shard-local + all-gather when a
+        :class:`~repro.comm.Stage4Inverter` is attached (full-kind factors
+        only — diagonal kinds are elementwise and not worth a collective),
+        the replicated path otherwise."""
+        cfg = self.cfg
+        if kind == "full" and self.stage4 is not None:
+            return self.stage4.invert(stat, damp, fam=fam, key=key)
+        return _damped_inv(stat, kind, damp, cfg.inverse_method, cfg.backend,
+                           cfg.ns_iters, cfg.ns_tol)
 
     # ---- preconditioned update for one family ----
 
@@ -453,8 +513,40 @@ class SPNGD:
         """No capture, no refresh: backward + stale-preconditioned update."""
         (loss, aux), grads = jax.value_and_grad(
             self.loss_fn, has_aux=True)(params, None, batch)
-        return self._finish(params, state, grads, state["curv"], lam, lr, mom,
+        return self._finish(params, state, grads,
+                            self._activate(state["curv"]), lam, lr, mom,
                             loss, aux, {})
+
+    # ---- double-buffer plumbing ----
+
+    def _activate(self, curv: dict) -> dict:
+        """Double-buffer activation: the buffer staged by the latest refresh
+        becomes the active preconditioner for THIS step (``_finish`` then
+        persists the swap into the state). Identity when the pipeline is
+        off. The refresh path performs its own activation inside
+        ``_refresh_family``; this one covers the fast (no-capture) steps."""
+        if not self.cfg.double_buffer:
+            return curv
+        return {fam: {**entry, "precond": entry["precond_next"]}
+                for fam, entry in curv.items()}
+
+    def upgrade_state(self, state: dict) -> dict:
+        """Adapt a loaded optimizer state to this config's buffer layout
+        (checkpoint compat across the double-buffer introduction): a
+        single-buffer checkpoint entering a ``double_buffer`` run seeds the
+        staged buffer from the active one (the first activation is then a
+        no-op — the run continues exactly where the old semantics left it);
+        a double-buffered checkpoint entering a single-buffer run drops the
+        staged copy. Same-layout states pass through unchanged."""
+        curv = {}
+        for fam, entry in state["curv"].items():
+            entry = dict(entry)
+            if self.cfg.double_buffer and "precond_next" not in entry:
+                entry["precond_next"] = dict(entry["precond"])
+            if not self.cfg.double_buffer:
+                entry.pop("precond_next", None)
+            curv[fam] = entry
+        return {**state, "curv": curv}
 
 
 # ---------------------------------------------------------------------------

@@ -48,6 +48,10 @@ class StatState:
     # Both stay 0 under flat strategies (the split is then meaningless).
     wire_intra_bytes_per_refresh: int = 0
     wire_inter_bytes_per_refresh: int = 0
+    # Stage-4 return leg under sharded inversion: the preconditioner
+    # all-gather (sym-packed f32; repro.comm.gather_stat_bytes). 0 for
+    # replicated inversion and for statistics that never shard.
+    gather_bytes_per_refresh: int = 0
     refresh_count: int = 0
 
 
@@ -58,7 +62,8 @@ class IntervalController:
                  max_interval: int = 0,
                  bytes_per_stat: Optional[dict[str, int]] = None,
                  wire_bytes_per_stat: Optional[dict[str, int]] = None,
-                 wire_level_bytes_per_stat: Optional[dict] = None):
+                 wire_level_bytes_per_stat: Optional[dict] = None,
+                 gather_bytes_per_stat: Optional[dict[str, int]] = None):
         self.alpha = alpha
         self.max_interval = max_interval          # 0 = unbounded (paper)
         self.stats = {n: StatState() for n in stat_names}
@@ -73,6 +78,11 @@ class IntervalController:
             for n, (intra, inter) in wire_level_bytes_per_stat.items():
                 self.stats[n].wire_intra_bytes_per_refresh = intra
                 self.stats[n].wire_inter_bytes_per_refresh = inter
+        if gather_bytes_per_stat:
+            # Stage-4 preconditioner gather under sharded inversion —
+            # FactorReducer.gather_bytes_per_stat / SPNGD.gather_bytes
+            for n, b in gather_bytes_per_stat.items():
+                self.stats[n].gather_bytes_per_refresh = b
         self.total_bytes = 0
         self.dense_bytes = 0                      # what refresh-every-step would cost
         self.total_wire_bytes = 0
@@ -81,6 +91,8 @@ class IntervalController:
         self.dense_wire_intra_bytes = 0
         self.total_wire_inter_bytes = 0
         self.dense_wire_inter_bytes = 0
+        self.total_gather_bytes = 0
+        self.dense_gather_bytes = 0
         self.comm_info: dict = {}                 # reducer tally (record_comm)
         self.steps = 0
 
@@ -101,6 +113,7 @@ class IntervalController:
             self.dense_wire_bytes += st.wire_bytes_per_refresh
             self.dense_wire_intra_bytes += st.wire_intra_bytes_per_refresh
             self.dense_wire_inter_bytes += st.wire_inter_bytes_per_refresh
+            self.dense_gather_bytes += st.gather_bytes_per_refresh
             if not flags.get(name, False):
                 continue
             d1, d2 = sims[name]
@@ -123,6 +136,7 @@ class IntervalController:
             self.total_wire_bytes += st.wire_bytes_per_refresh
             self.total_wire_intra_bytes += st.wire_intra_bytes_per_refresh
             self.total_wire_inter_bytes += st.wire_inter_bytes_per_refresh
+            self.total_gather_bytes += st.gather_bytes_per_refresh
 
     # ---- Stage-3 comm bookkeeping (repro.comm reducer tally) ----
 
@@ -148,6 +162,8 @@ class IntervalController:
             "dense_wire_intra_bytes": self.dense_wire_intra_bytes,
             "total_wire_inter_bytes": self.total_wire_inter_bytes,
             "dense_wire_inter_bytes": self.dense_wire_inter_bytes,
+            "total_gather_bytes": self.total_gather_bytes,
+            "dense_gather_bytes": self.dense_gather_bytes,
             "comm_info": dict(self.comm_info),
             "stats": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
@@ -167,6 +183,9 @@ class IntervalController:
         ctrl.dense_wire_intra_bytes = state.get("dense_wire_intra_bytes", 0)
         ctrl.total_wire_inter_bytes = state.get("total_wire_inter_bytes", 0)
         ctrl.dense_wire_inter_bytes = state.get("dense_wire_inter_bytes", 0)
+        # pre-PR-7 checkpoints have no Stage-4 gather ledger: resume at zero
+        ctrl.total_gather_bytes = state.get("total_gather_bytes", 0)
+        ctrl.dense_gather_bytes = state.get("dense_gather_bytes", 0)
         ctrl.comm_info = dict(state.get("comm_info", {}))
         for n, s in state["stats"].items():
             ctrl.stats[n] = StatState(**s)
@@ -197,6 +216,10 @@ class IntervalController:
                 "dense_wire_intra_bytes": self.dense_wire_intra_bytes,
                 "total_wire_inter_bytes": self.total_wire_inter_bytes,
                 "dense_wire_inter_bytes": self.dense_wire_inter_bytes,
+                # Stage-4 preconditioner gather (sharded inversion);
+                # identically 0 under replicated Stage-4
+                "total_gather_bytes": self.total_gather_bytes,
+                "dense_gather_bytes": self.dense_gather_bytes,
                 **self.comm_info,
             },
             "per_stat": {n: dataclasses.asdict(s) for n, s in self.stats.items()},

@@ -299,8 +299,8 @@ def _damped_inverse_ref(f, damping, method: str, ns_iters: int,
 def _damped_inverse_pallas(f, damping, method: str, ns_iters: int,
                            ns_tol: float):
     from repro.kernels import ops
-    if method != "newton_schulz" or f.shape[-1] > ops.NS_KERNEL_MAX_DIM:
-        # direct methods (and over-VMEM blocks) degrade to ref in place
+    if method != "newton_schulz":
+        # direct methods degrade to ref in place
         return _damped_inverse_ref(f, damping, method, ns_iters, ns_tol)
     b = f.shape[-1]
     f32 = f.astype(jnp.float32)
@@ -308,8 +308,11 @@ def _damped_inverse_pallas(f, damping, method: str, ns_iters: int,
     d = jnp.broadcast_to(jnp.asarray(damping, jnp.float32), f.shape[:-2])
     m = m + d[..., None, None] * jnp.eye(b, dtype=jnp.float32)
     lead = m.shape[:-2]
-    x, res = ops.ns_inverse(m.reshape((-1, b, b)), iters=ns_iters,
-                            tol=ns_tol)
+    # over-VMEM blocks run the two-level tiled kernel (HBM-resident
+    # operands, VMEM tile loop per matmul) instead of degrading to ref
+    kern = (ops.ns_inverse_tiled if b > ops.NS_KERNEL_MAX_DIM
+            else ops.ns_inverse)
+    x, res = kern(m.reshape((-1, b, b)), iters=ns_iters, tol=ns_tol)
     x = x.reshape(lead + (b, b))
     res = res.reshape(lead)
     return _ns_eigh_fallback(f, damping, x, res, ns_tol)

@@ -32,10 +32,18 @@ Contract per grid instance (one factor block, fully VMEM-resident):
 
 The whole block stays resident: M, X and the step temporary are
 ``3 * b^2 * 4`` bytes, which caps the kernel at b = 1024 against the
-~16 MB/core VMEM (``ops.NS_KERNEL_MAX_DIM``); larger blocks route to the
-jnp reference, where XLA tiles the matmuls itself.
+~16 MB/core VMEM (``ops.NS_KERNEL_MAX_DIM``). Larger blocks run the
+TWO-LEVEL tiled variant below (``ns_tiled_residual`` /
+``ns_tiled_update``): the operands stay HBM-resident and each matmul of
+the iteration walks a ``(bt, bt)`` VMEM tile grid — outer level = the
+Newton-Schulz step sequencing (one ``fori_loop`` trip per iteration on
+the XLA side, ``ops.ns_inverse_tiled``), inner level = the per-matmul
+tile loop inside the kernels — so big blocks no longer fall back to the
+jnp reference iteration.
 
-Grid: (g,); one program per block, no revisit.
+Grid: (g,) for the VMEM-resident kernel (one program per block, no
+revisit); (g, nt, nt, nt) for the tiled kernels (output tiles revisited
+along the contraction axis, the standard accumulate-in-VMEM pattern).
 """
 
 from __future__ import annotations
@@ -100,3 +108,116 @@ def ns_inverse_blocks(m: jax.Array, *, iters: int, tol: float,
         ],
         interpret=interpret,
     )(m)
+
+
+# ---------------------------------------------------------------------------
+# Two-level tiled variant: blocks past the VMEM cap. M and X stay
+# HBM-resident; each Newton-Schulz matmul is its own pallas_call whose
+# (g, nt, nt, nt) grid streams (bt, bt) tiles through VMEM — the output
+# tile is revisited along the trailing contraction dim k and accumulated
+# in place (it stays VMEM-resident across the k sweep because its index
+# map ignores k). Step sequencing (freeze-on-converge, the iteration cap)
+# lives in ops.ns_inverse_tiled's fori_loop.
+# ---------------------------------------------------------------------------
+
+def _mm(a, b):
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _ns_resid_kernel(m_ref, x_ref, r_ref, ss_ref, *, nt: int, bt: int):
+    """One (i, j, k) tile visit of R = I - M @ X, plus the squared
+    Frobenius norm of R accumulated into ss (g, 1, 1) across all tiles."""
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+    part = _mm(m_ref[0], x_ref[0])
+
+    @pl.when(k == 0)
+    def _init():
+        # identity tile at global offsets (i*bt, j*bt): nonzero only when
+        # the tile straddles the diagonal (i == j)
+        ri = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 0) + i * bt
+        ci = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 1) + j * bt
+        eye = jnp.where(ri == ci, 1.0, 0.0).astype(jnp.float32)
+        r_ref[...] = (eye - part)[None]
+
+    @pl.when(k != 0)
+    def _accum():
+        r_ref[...] = r_ref[...] - part[None]
+
+    @pl.when(k == nt - 1)
+    def _norm():
+        r = r_ref[0]
+        ss = jnp.sum(r * r)
+        first = jnp.logical_and(i == 0, j == 0)
+
+        @pl.when(first)
+        def _seed():
+            ss_ref[...] = ss.reshape(1, 1, 1)
+
+        @pl.when(jnp.logical_not(first))
+        def _add():
+            ss_ref[...] = ss_ref[...] + ss
+
+
+
+def ns_tiled_residual(m: jax.Array, x: jax.Array, *, bt: int,
+                      interpret: bool = False
+                      ) -> tuple[jax.Array, jax.Array]:
+    """R = I - M @ X over (g, bp, bp) HBM-resident blocks with a (bt, bt)
+    VMEM tile loop; also returns ss (g, 1, 1) = ||R||_F^2 per block."""
+    g, bp, _ = m.shape
+    nt = bp // bt
+    return pl.pallas_call(
+        functools.partial(_ns_resid_kernel, nt=nt, bt=bt),
+        grid=(g, nt, nt, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, i, k)),
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, i, j)),
+            pl.BlockSpec((1, 1, 1), lambda gi, i, j, k: (gi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, bp, bp), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m, x)
+
+
+def _ns_update_kernel(xij_ref, xik_ref, r_ref, o_ref):
+    """One (i, j, k) tile visit of X' = X + X @ R (the same X streamed
+    under two index maps: the addend tile (i, j) and the operand tile
+    (i, k))."""
+    k = pl.program_id(3)
+    part = _mm(xik_ref[0], r_ref[0])
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = xij_ref[...] + part[None]
+
+    @pl.when(k != 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + part[None]
+
+
+def ns_tiled_update(x: jax.Array, r: jax.Array, *, bt: int,
+                    interpret: bool = False) -> jax.Array:
+    """X' = X + X @ R over (g, bp, bp) HBM-resident blocks."""
+    g, bp, _ = x.shape
+    nt = bp // bt
+    return pl.pallas_call(
+        _ns_update_kernel,
+        grid=(g, nt, nt, nt),
+        in_specs=[
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, i, j)),
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, i, k)),
+            pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bt), lambda gi, i, j, k: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, bp, bp), jnp.float32),
+        interpret=interpret,
+    )(x, x, r)

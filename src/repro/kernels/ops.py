@@ -136,8 +136,9 @@ def _pad_seq(s: int, bq: int, bk: int) -> int:
 
 # largest factor block the Newton-Schulz kernel keeps VMEM-resident: one
 # block costs ~3 * b^2 * 4 bytes (M, X, step temporary); 1024 -> ~12.6 MB
-# against the ~16 MB/core budget. Dispatch routes bigger blocks to the jnp
-# reference iteration (XLA tiles those matmuls itself).
+# against the ~16 MB/core budget. Dispatch routes bigger blocks to the
+# two-level tiled variant (ns_inverse_tiled) below, which keeps the
+# operands HBM-resident and streams (bt, bt) VMEM tiles per matmul.
 NS_KERNEL_MAX_DIM = 1024
 
 
@@ -181,6 +182,66 @@ def ns_inverse(m: jax.Array, *, iters: int, tol: float,
     x, res = _ns.ns_inverse_blocks(m, iters=iters, tol=tol / scale,
                                    interpret=interpret)
     return x[:, :b, :b], res[:, 0] * scale
+
+
+def _ns_tile(bp: int) -> int:
+    """Largest MXU-aligned tile that divides the padded block dim (so the
+    tile grid needs no edge masking); bp is always a multiple of 128."""
+    for bt in (512, 384, 256, 128):
+        if bp % bt == 0:
+            return bt
+    return 128
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "tol", "interpret"))
+def ns_inverse_tiled(m: jax.Array, *, iters: int, tol: float,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Two-level tiled Newton-Schulz inverse for blocks past
+    :data:`NS_KERNEL_MAX_DIM` — same contract as :func:`ns_inverse`
+    (already-damped symmetric (g, b, b) blocks in, (inverse, per-block
+    residual) out) with no VMEM cap on b.
+
+    Level 1 (here): the iteration's step sequencing — a ``fori_loop``
+    whose body calls one residual kernel (``R = I - M X`` + ||R||_F^2)
+    and one update kernel (``X' = X + X R``) per trip, freezing converged
+    blocks exactly like the resident kernel does. Level 2 (the kernels):
+    each matmul walks a (bt, bt) VMEM tile grid over the HBM-resident
+    operands. Padding/rescale rules are identical to :func:`ns_inverse`
+    (``dpad = ||M||_inf`` identity padding, residual rescaled to the
+    unpadded ||I_b||_F), except blocks pad to the tile size so the grid
+    needs no edge masking.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    g, b, _ = m.shape
+    bt = _ns_tile(-(-b // 128) * 128)
+    bp = -(-b // bt) * bt
+    if bp != b:
+        dpad = jnp.maximum(jnp.max(jnp.sum(jnp.abs(m), axis=-1), axis=-1),
+                           jnp.float32(1e-30))           # (g,): ||M||_inf
+        m = jnp.pad(m, ((0, 0), (0, bp - b), (0, bp - b)))
+        pad_diag = jnp.where(jnp.arange(bp) >= b, 1.0, 0.0)
+        m = m + dpad[:, None, None] * jnp.diag(pad_diag)
+    scale = math.sqrt(bp / b)
+    tol_p = tol / scale
+    rnorm = 1.0 / math.sqrt(bp)
+    am = jnp.abs(m)
+    n1 = jnp.max(jnp.sum(am, axis=-2), axis=-1)          # (g,)
+    ninf = jnp.max(jnp.sum(am, axis=-1), axis=-1)
+    x0 = m * (1.0 / (n1 * ninf))[:, None, None]
+
+    def resid(x):
+        r, ss = _ns.ns_tiled_residual(m, x, bt=bt, interpret=interpret)
+        return r, jnp.sqrt(ss[:, 0, 0]) * rnorm
+
+    def body(_, x):
+        r, res = resid(x)
+        xn = _ns.ns_tiled_update(x, r, bt=bt, interpret=interpret)
+        return jnp.where((res > tol_p)[:, None, None], xn, x)
+
+    x = jax.lax.fori_loop(0, iters, body, x0)
+    _, res = resid(x)                # residual of the RETURNED iterate
+    return x[:, :b, :b], res * scale
 
 
 # VMEM budget for one quantization tile, in ELEMENTS of the packed row

@@ -90,7 +90,8 @@ def build_case(arch: str, shape_name: str, mesh, *,
                backend: str = "auto", factor_dtype: str = "f32",
                inverse_method: str = "eigh", comm_strategy: str = "dense",
                wire_dtype: Optional[str] = None,
-               devices_per_host: Optional[int] = None):
+               devices_per_host: Optional[int] = None,
+               inverse_sharding: bool = False):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
@@ -107,7 +108,10 @@ def build_case(arch: str, shape_name: str, mesh, *,
     comm_strategy/wire_dtype: Stage-3 factor reduce under the shardmap
     schedule (repro.comm) — the ring strategies swap the psum_scatter for
     ppermute hops, visible in the dry-run's collective-permute byte
-    column."""
+    column. inverse_sharding: Stage-4 distribution (repro.comm.Stage4
+    Inverter) — each device inverts only its reducer-owned factor chunk and
+    the preconditioners all-gather (implies the double buffer), so the
+    dry-run compiles the sharded refresh at production mesh scale."""
     cfg = effective_config(arch, shape_name)
     if backend != "auto":
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -175,7 +179,9 @@ def build_case(arch: str, shape_name: str, mesh, *,
                     model.site_counts,
                     NGDConfig(backend=cfg.backend,
                               inverse_method=inverse_method,
-                              factor_dtype=FACTOR_DTYPES[factor_dtype]),
+                              factor_dtype=FACTOR_DTYPES[factor_dtype],
+                              inverse_sharding=inverse_sharding,
+                              double_buffer=inverse_sharding),
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
@@ -249,7 +255,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
              factor_dtype: str = "f32",
              inverse_method: str = "eigh", comm_strategy: str = "dense",
              wire_dtype: Optional[str] = None,
-             devices_per_host: Optional[int] = None) -> dict:
+             devices_per_host: Optional[int] = None,
+             inverse_sharding: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
@@ -258,6 +265,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
            "tp_align": tp_align, "backend": backend,
            "factor_dtype": factor_dtype, "inverse_method": inverse_method,
            "comm_strategy": comm_strategy,
+           "inverse_sharding": inverse_sharding,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
         with compat.set_mesh(mesh):
@@ -266,7 +274,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                 rwkv_chunk=rwkv_chunk, fast=fast, backend=backend,
                 factor_dtype=factor_dtype, inverse_method=inverse_method,
                 comm_strategy=comm_strategy, wire_dtype=wire_dtype,
-                devices_per_host=devices_per_host)
+                devices_per_host=devices_per_host,
+                inverse_sharding=inverse_sharding)
             reducer = getattr(step, "reducer", None)
             if reducer is not None:
                 rec["comm"] = reducer.scatter_report()
@@ -278,6 +287,14 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                         intra for intra, _ in levels)
                     rec["comm"]["wire_inter_bytes_per_refresh"] = sum(
                         inter for _, inter in levels)
+                    # Stage-4 gather leg: bytes the preconditioner
+                    # all-gather moves per refresh (0 when the inversion is
+                    # replicated — nothing to gather)
+                    rec["comm"]["gather_bytes_per_refresh"] = (
+                        sum(reducer.gather_bytes_per_stat().values())
+                        if inverse_sharding else 0)
+                    rec["stage4"] = stage4_report(
+                        reducer, inverse_sharding, inverse_method)
             lowered = jax.jit(step).lower(*args)
             t1 = time.time()
             compiled = lowered.compile()
@@ -340,6 +357,59 @@ def _active_params(cfg: ArchConfig) -> float:
     return active
 
 
+def stage4_report(reducer, inverse_sharding: bool, method: str) -> dict:
+    """Per-layer Stage-4 inversion timing + gather bytes for the scatter
+    report (make_report's §Stage-4 input). For every full-kind factor the
+    reducer knows, invert ONE leading slice of a synthetic SPD stand-in
+    with the configured method on the dry-run host — the dry run never
+    materializes real factors — and scale by the layer count / scatter
+    group, so the report can show the modelled replicated-vs-sharded
+    refresh cost per layer without running a training step."""
+    import math
+    import time as _time
+
+    import numpy as np
+
+    from repro.comm.comm import _leaf_shape
+    from repro.kernels import dispatch
+
+    gather = reducer.gather_bytes_per_stat()
+    rep = {"inverse_sharding": inverse_sharding, "method": method,
+           "stats": {}}
+    rng = np.random.RandomState(0)
+    for fam, stats in reducer.template.items():
+        for key, leaf in stats.items():
+            if key not in ("a", "g") or not reducer.sym_fn(fam, key):
+                continue
+            shape = _leaf_shape(leaf)          # (lead..., nb, b, b)
+            lead = shape[0]
+            axes = reducer.scatter_axes(lead)
+            p = reducer.group_size(axes) if axes else 1
+            b = shape[-1]
+            one = (1,) + tuple(shape[1:])      # one leading (layer) slice
+            m = rng.randn(*one[:-1], b).astype(np.float32)
+            spd = jnp.asarray(m @ np.swapaxes(m, -1, -2) / b
+                              + 0.1 * np.eye(b, dtype=np.float32))
+            fn = jax.jit(lambda s: dispatch.damped_inverse(
+                s, jnp.asarray(1e-3, jnp.float32), method=method))
+            fn(spd).block_until_ready()        # compile + warm
+            t0 = _time.perf_counter()
+            fn(spd).block_until_ready()
+            us = (_time.perf_counter() - t0) * 1e6
+            name = f"{fam}.{key}"
+            rep["stats"][name] = {
+                "block_shape": list(shape),
+                "us_per_layer": us,
+                "layers": int(lead),
+                "group": int(p),
+                "replicated_us_per_device": us * lead,
+                "sharded_us_per_device": us * math.ceil(lead / p),
+                "gather_bytes": int(gather.get(name, 0))
+                if inverse_sharding else 0,
+            }
+    return rep
+
+
 def _mem_dict(mem) -> dict:
     if mem is None:
         return {}
@@ -393,6 +463,12 @@ def main():
                     help="hier host-topology model: width of the "
                          "full-precision intra-host level (default: "
                          "jax.local_device_count())")
+    ap.add_argument("--inverse-sharding", action="store_true",
+                    help="Stage-4 distribution (repro.comm.Stage4Inverter): "
+                         "each device inverts only its reducer-owned factor "
+                         "chunk and preconditioners all-gather; implies the "
+                         "double buffer and records per-layer inverse "
+                         "timing + gather bytes in the scatter report")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -402,6 +478,10 @@ def main():
         # the GSPMD-auto schedule has no explicit Stage-3 collective; a
         # record tagged ring/ring_fp8 that actually measured GSPMD would lie
         ap.error("--comm-strategy requires --schedule shardmap")
+    if args.inverse_sharding and args.schedule != "shardmap":
+        # the sharded Stage-4 refresh rides the reducer's scatter layout,
+        # which only exists under the explicit shardmap schedule
+        ap.error("--inverse-sharding requires --schedule shardmap")
 
     archs = LM_ARCHS if (args.all or args.arch is None) else [args.arch]
     shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
@@ -423,6 +503,8 @@ def main():
             variant += f"__{args.wire_dtype}"
         if args.devices_per_host:
             variant += f"__dph{args.devices_per_host}"
+    if args.inverse_sharding:
+        variant += "__invshard"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -448,7 +530,8 @@ def main():
                                inverse_method=args.inverse_method,
                                comm_strategy=args.comm_strategy,
                                wire_dtype=args.wire_dtype,
-                               devices_per_host=args.devices_per_host)
+                               devices_per_host=args.devices_per_host,
+                               inverse_sharding=args.inverse_sharding)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 status = rec["status"]

@@ -103,7 +103,8 @@ def make_fast_step(model, opt: SPNGD, accum: int = 1) -> Callable:
         (grads, loss_sum), _ = jax.lax.scan(
             body, (zeros, jnp.zeros((), jnp.float32)), micro)
         grads = jax.tree.map(lambda g: g / accum, grads)
-        return opt._finish(params, opt_state, grads, opt_state["curv"],
+        return opt._finish(params, opt_state, grads,
+                           opt._activate(opt_state["curv"]),
                            lam, lr, mom, loss_sum / accum, {}, {})
 
     return fast_step
@@ -137,12 +138,20 @@ def make_shardmap_train_step(model, opt: SPNGD, mesh, accum: int = 1,
     """
     from jax.sharding import PartitionSpec as P
 
-    from repro.comm import FactorReducer
+    from repro.comm import FactorReducer, Stage4Inverter
     _check_accum_capture(opt, accum)
     reducer = FactorReducer(mesh, manual_axes=manual_axes, comm=comm,
                             template=jax.eval_shape(opt.fstats_fn),
                             sym_fn=opt.sym_stat)
     dp, ndev = reducer.dp, reducer.ndev
+    if opt.cfg.inverse_sharding:
+        # Stage-4 distribution: the refresh's full-kind inverses run shard-
+        # locally over THIS reducer's chunk layout and all-gather. Attached
+        # here (not in the optimizer) because ownership is the reducer's.
+        opt.set_stage4(Stage4Inverter(reducer, method=opt.cfg.inverse_method,
+                                      backend=opt.cfg.backend,
+                                      ns_iters=opt.cfg.ns_iters,
+                                      ns_tol=opt.cfg.ns_tol))
 
     def inner(params, batch):
         if accum == 1:
@@ -250,7 +259,8 @@ def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
         sm = compat.shard_map(inner, mesh=mesh, in_specs=(P(), batch_specs),
                               out_specs=(P(), P()), axis_names=set(dp))
         loss, grads = sm(params, batch)
-        return opt._finish(params, opt_state, grads, opt_state["curv"],
+        return opt._finish(params, opt_state, grads,
+                           opt._activate(opt_state["curv"]),
                            lam, lr, mom, loss, {}, {})
 
     fast_step.reducer = reducer
@@ -336,6 +346,20 @@ def main():
                     help="host-topology model for the hier strategy: group "
                          "size of the full-precision intra-host level "
                          "(default: jax.local_device_count())")
+    ap.add_argument("--inverse-sharding", action="store_true",
+                    help="Stage-4 distribution: invert only the local "
+                         "factor shard (FactorReducer chunk ownership) and "
+                         "all-gather preconditioners as sym-packed f32 "
+                         "triangles. Implies --double-buffer (the pipelined "
+                         "mode the paper describes). This single-process "
+                         "CLI runs the jit schedule, so the flag here "
+                         "MODELS the gather ledger; the sharded inversion "
+                         "itself runs under make_shardmap_train_step "
+                         "(repro.launch.dryrun --schedule shardmap)")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="pipeline refreshes: inverses computed at step t "
+                         "activate at t+1 while t consumes the previous "
+                         "buffer (Algorithm 2 still governs staleness)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     args = ap.parse_args()
@@ -353,11 +377,15 @@ def main():
     print(f"arch={args.arch} ({'full' if args.full_config else 'reduced'}), "
           f"{n / 1e6:.1f}M params")
 
+    inverse_sharding = args.inverse_sharding
+    double_buffer = args.double_buffer or inverse_sharding
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts,
                 NGDConfig(damping=args.damping, backend=args.backend,
                           inverse_method=args.inverse_method,
-                          factor_dtype=FACTOR_DTYPES[args.factor_dtype]))
+                          factor_dtype=FACTOR_DTYPES[args.factor_dtype],
+                          inverse_sharding=inverse_sharding,
+                          double_buffer=double_buffer))
     state = opt.init(params)
     comm_cfg = comm_lib.make_comm_config(args.comm_strategy, args.wire_dtype,
                                          backend=args.backend,
@@ -366,9 +394,14 @@ def main():
                               bytes_per_stat=opt.stat_bytes(),
                               wire_bytes_per_stat=opt.wire_bytes(comm_cfg),
                               wire_level_bytes_per_stat=opt.wire_level_bytes(
-                                  comm_cfg))
+                                  comm_cfg),
+                              gather_bytes_per_stat=(
+                                  opt.gather_bytes() if inverse_sharding
+                                  else None))
     ctrl.record_comm({"strategy": comm_cfg.strategy,
-                      "wire_dtype": comm_cfg.wire_dtype})
+                      "wire_dtype": comm_cfg.wire_dtype,
+                      "inverse_sharding": inverse_sharding,
+                      "double_buffer": double_buffer})
     data = token_batches(cfg.vocab, args.batch, args.seq, seed=0)
     lr_fn = polynomial_decay(args.lr, 0, args.steps, 4.0)
     step_j = jax.jit(make_train_step(model, opt, accum=args.accum))
@@ -398,6 +431,9 @@ def main():
           f"{s['comm']['total_wire_bytes']} B "
           f"({100 * s['comm']['wire_reduction_rate']:.1f}% of "
           f"refresh-every-step)")
+    if inverse_sharding:
+        print(f"modelled Stage-4 gather (sym-packed f32): "
+              f"{s['comm']['total_gather_bytes']} B")
 
 
 if __name__ == "__main__":

@@ -85,3 +85,67 @@ def test_checkpoint_roundtrip_continuation(tmp_path, factor_dtype):
     _assert_trees_bitwise_equal(p3, params)
     _assert_trees_bitwise_equal(s3, state)
     assert c3.state_dict() == ctrl.state_dict()
+
+
+def test_checkpoint_roundtrip_double_buffer(tmp_path):
+    """ISSUE-7: the double-buffered inverse state (active + staged
+    preconditioners) must survive a mid-interval save/restore and continue
+    bit-identically — BREAK_AT=3 lands between a refresh and its activation
+    consumer, so both buffers genuinely differ at the break."""
+    cfg = NGDConfig(damping=1e-3, double_buffer=True)
+
+    params, opt, state, ctrl = _make(cfg)
+    for t in range(1, STEPS + 1):
+        params, state = _advance(opt, ctrl, params, state, t)
+
+    p2, opt2, s2, c2 = _make(cfg)
+    for t in range(1, BREAK_AT + 1):
+        p2, s2 = _advance(opt2, c2, p2, s2, t)
+    # both buffers are in the saved tree
+    for fam in s2["curv"]:
+        assert "precond_next" in s2["curv"][fam]
+    save_checkpoint(str(tmp_path), BREAK_AT, p2, s2, c2.state_dict())
+
+    r = restore_checkpoint(str(tmp_path))
+    p3, s3 = r["params"], opt2.upgrade_state(r["opt_state"])
+    _assert_trees_bitwise_equal(s3, s2)        # same layout: passthrough
+    c3 = IntervalController.from_state_dict(r["controller"])
+    _, opt3, _, _ = _make(cfg)
+    for t in range(BREAK_AT + 1, STEPS + 1):
+        p3, s3 = _advance(opt3, c3, p3, s3, t)
+    _assert_trees_bitwise_equal(p3, params)
+    _assert_trees_bitwise_equal(s3, state)
+    assert c3.state_dict() == ctrl.state_dict()
+
+
+def test_pre_pr7_checkpoint_single_buffer_fallback(tmp_path):
+    """A pre-PR-7 checkpoint (no staged buffer, no gather ledger) must load
+    into a double-buffered run: ``upgrade_state`` seeds the staged buffer
+    from the active one (first activation is a no-op) and the controller
+    resumes with the gather ledger at zero."""
+    sb_cfg = NGDConfig(damping=1e-3)
+    params, opt, state, ctrl = _make(sb_cfg)
+    for t in range(1, BREAK_AT + 1):
+        params, state = _advance(opt, ctrl, params, state, t)
+    # strip the PR-7 ledger fields to get a byte-faithful old checkpoint
+    cs = ctrl.state_dict()
+    del cs["total_gather_bytes"], cs["dense_gather_bytes"]
+    for st in cs["stats"].values():
+        del st["gather_bytes_per_refresh"]
+    save_checkpoint(str(tmp_path), BREAK_AT, params, state, cs)
+
+    r = restore_checkpoint(str(tmp_path))
+    db_cfg = NGDConfig(damping=1e-3, double_buffer=True)
+    _, opt2, _, _ = _make(db_cfg)
+    s2 = opt2.upgrade_state(r["opt_state"])
+    for fam in s2["curv"]:
+        assert "precond_next" in s2["curv"][fam]
+        _assert_trees_bitwise_equal(s2["curv"][fam]["precond_next"],
+                                    s2["curv"][fam]["precond"])
+    c2 = IntervalController.from_state_dict(r["controller"])
+    assert c2.total_gather_bytes == 0
+    p2 = r["params"]
+    for t in range(BREAK_AT + 1, STEPS + 1):
+        p2, s2 = _advance(opt2, c2, p2, s2, t)
+    for leaf in jax.tree.leaves(p2):
+        assert np.isfinite(np.asarray(leaf)).all()

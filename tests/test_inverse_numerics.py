@@ -222,9 +222,10 @@ def test_ns_kernel_rejects_over_vmem_blocks():
                        tol=kfac.NS_TOL, interpret=True)
 
 
-def test_ns_pallas_over_vmem_blocks_degrade_to_ref():
-    """A block too large for the kernel's VMEM budget must still invert
-    (via the jnp reference iteration), not fail."""
+def test_ns_pallas_over_vmem_blocks_use_tiled_kernel():
+    """A block too large for the resident kernel's VMEM budget routes to
+    the two-level tiled kernel (PR 7) — it must invert, not fail, and not
+    silently fall back to the jnp reference iteration."""
     b = ops.NS_KERNEL_MAX_DIM + 128
     f = jnp.eye(b)[None] * 2.0
     x = dispatch.damped_inverse(f, jnp.asarray(0.0),
@@ -232,6 +233,38 @@ def test_ns_pallas_over_vmem_blocks_degrade_to_ref():
                                 ns_iters=12)
     np.testing.assert_allclose(np.asarray(x), np.eye(b)[None] / 2.0,
                                rtol=1e-4, atol=1e-5)
+
+
+def test_ns_tiled_1536_matches_eigh_without_fallback(monkeypatch):
+    """PR 7 acceptance: a 1536-dim block (1.5x the resident kernel's cap)
+    runs through the TILED NS kernel — zero jnp-reference fallbacks, zero
+    eigh re-solves — and matches the eigh oracle to the grid tolerance."""
+    import repro.kernels.newton_schulz as ns_mod
+    b = 1536
+    routed = []
+    monkeypatch.setattr(
+        ops, "ns_inverse_tiled",
+        (lambda orig: lambda m, **kw: routed.append(m.shape) or orig(m, **kw)
+         )(ops.ns_inverse_tiled))
+    # the jnp reference iteration must never run on this path
+    monkeypatch.setattr(
+        kfac, "newton_schulz_inverse",
+        lambda *a, **k: pytest.fail("tiled path fell back to the jnp "
+                                    "reference iteration"))
+    f = _spd_from_spectrum(_logspec(1e2), nb=1, b=b, seed=7)
+    d = jnp.asarray(1e-1, jnp.float32)
+    ns, info = dispatch.damped_inverse(f, d, method="newton_schulz",
+                                       backend="pallas", ns_iters=20,
+                                       return_info=True)
+    assert routed == [(1, b, b)]
+    # converged in-kernel: the eigh/SPD fallback must NOT have fired
+    assert np.asarray(info["ns_converged"]).all(), info["ns_res"]
+    eigh = dispatch.damped_inverse(f, d, method="eigh", backend="ref")
+    scale = np.max(np.abs(np.asarray(eigh)))
+    err = np.max(np.abs(np.asarray(ns) - np.asarray(eigh)))
+    assert err <= 5e-3 * scale, err / scale
+    # two-level structure sanity: the padded dim tiles exactly (1536 = 3*512)
+    assert ops._ns_tile(b) == 512 and hasattr(ns_mod, "ns_tiled_residual")
 
 
 def test_damped_inverse_unknown_method_raises():
