@@ -69,6 +69,74 @@ def _bench_train_step(backend: str, quick: bool):
     return t, loss
 
 
+def _bench_obs(quick: bool):
+    """A/B of the telemetry cost (repro.obs): the SAME fast-step training
+    loop — per-step block_until_ready in both arms so only the logger work
+    differs — with the MetricsLogger enabled (JSONL to a temp file, per-step
+    events with scalar fetches + ledger drain, exactly what a
+    ``--metrics-jsonl`` run pays) vs disabled (the default no-op path). The
+    fast step is the cheapest step, so the ratio is the most conservative
+    reading of the <3% instrumentation budget. Returns per-step us for both
+    arms; alternating repetitions, medians."""
+    import tempfile
+    import time as _time
+
+    from repro.configs import get_config
+    from repro.core.ngd import NGDConfig, SPNGD
+    from repro.core.stale import IntervalController
+    from repro.launch.train import make_fast_step
+    from repro.models.transformer import DecoderLM
+    from repro.obs import MetricsLogger
+
+    cfg = get_config("llama3_2_1b").reduced(
+        head_dim=32, d_ff=128, vocab=256, sliding_window=8)
+    model = DecoderLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = SPNGD(model.loss, model.site_infos(), model.fstats,
+                model.site_counts, NGDConfig(damping=1e-3))
+    state = opt.init(params)
+    rng = np.random.RandomState(0)
+    b, s = (4, 16) if quick else (8, 32)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+    fast = jax.jit(make_fast_step(model, opt))
+    steps = 10 if quick else 20
+
+    def loop(log):
+        ctrl = IntervalController(opt.stat_names(),
+                                  bytes_per_stat=opt.stat_bytes())
+        none = {k: False for k in opt.stat_names()}
+        p, st = params, state
+        t_start = _time.perf_counter()
+        for t in range(1, steps + 1):
+            t0 = _time.perf_counter()
+            p, st, m = fast(p, st, batch, 1e-3, 5e-3, 0.9)
+            ctrl.update(t, none, {})
+            jax.block_until_ready(m["loss"])
+            dt = _time.perf_counter() - t0
+            if log.enabled:
+                log.log_step(t, loss=float(m["loss"]), dt=dt, kind="fast",
+                             grad_norm=float(m["grad_norm"]),
+                             update_norm=float(m["update_norm"]),
+                             comm=ctrl.drain())
+        return (_time.perf_counter() - t_start) * 1e6 / steps
+
+    jax.block_until_ready(
+        fast(params, state, batch, 1e-3, 5e-3, 0.9)[2]["loss"])  # compile
+    off_times, on_times = [], []
+    with tempfile.TemporaryDirectory() as tmp:
+        for i in range(3):
+            off_times.append(loop(MetricsLogger()))
+            with MetricsLogger(os.path.join(tmp, f"obs_{i}.jsonl")) as log:
+                on_times.append(loop(log))
+    off = sorted(off_times)[1]
+    on = sorted(on_times)[1]
+    return {"disabled_us": off, "enabled_us": on, "ratio": on / off,
+            "steps": steps}
+
+
 def _bench_attn_bwd(quick: bool):
     """A/B the attention backward: recompute-through-ref VJP (the scheme
     this repo shipped before the fused kernels) vs the fused Pallas
@@ -526,6 +594,18 @@ def run(quick: bool = False):
     p = LAST_RESULTS["train_step.pallas"]["us"]
     LAST_RESULTS["train_step.pallas_over_ref"] = {"ratio": p / r}
     out.append(row("train_step.pallas_over_ref", 0.0, f"ratio={p / r:.2f}"))
+
+    # ---- telemetry cost A/B: metrics stream enabled vs disabled ----
+    ob = _bench_obs(quick)
+    LAST_RESULTS["obs.loop_disabled"] = {"us": ob["disabled_us"]}
+    LAST_RESULTS["obs.loop_enabled"] = {"us": ob["enabled_us"]}
+    LAST_RESULTS["obs.enabled_over_disabled"] = {"ratio": ob["ratio"]}
+    out.append(row("obs.loop_disabled", ob["disabled_us"],
+                   f"steps={ob['steps']}"))
+    out.append(row("obs.loop_enabled", ob["enabled_us"],
+                   f"steps={ob['steps']}"))
+    out.append(row("obs.enabled_over_disabled", 0.0,
+                   f"ratio={ob['ratio']:.3f}"))
     return out
 
 

@@ -516,24 +516,29 @@ class FactorReducer:
         the fused SYRK epilogue take the pre-packed all_to_all path and
         come back decoded to dense f32."""
         from repro import quant
-        if quant.is_wire(v):
-            return self._fused_wire(v)
-        axes = self.scatter_axes(v.shape[0]) if v.ndim >= 1 else ()
-        if not axes:
-            return jax.lax.psum(v, self.dp)
-        if self.comm.strategy in ("dense", "fused"):
-            # fused: non-wire stats (diag / unit-wise, never wire-captured)
-            # stay on the exact dense path
-            v = jax.lax.psum_scatter(v, axes, scatter_dimension=0,
-                                     tiled=True)
-        elif self.comm.strategy == "hier":
-            v = self._hier(v, axes, symmetric=self.sym_fn(fam, key))
-        else:
-            v = self._ring(v, axes, symmetric=self.sym_fn(fam, key))
-        rest = tuple(a for a in self.dp if a not in axes)
-        if rest:
-            v = jax.lax.psum(v, rest)
-        return v
+        from repro.obs.tracing import STAGE_REDUCE
+        # strategy-tagged stage scope: trace-viewer A/Bs of comm strategies
+        # line up under one stable prefix
+        with jax.named_scope(
+                f"{STAGE_REDUCE}[{self.comm.strategy}:{fam}.{key}]"):
+            if quant.is_wire(v):
+                return self._fused_wire(v)
+            axes = self.scatter_axes(v.shape[0]) if v.ndim >= 1 else ()
+            if not axes:
+                return jax.lax.psum(v, self.dp)
+            if self.comm.strategy in ("dense", "fused"):
+                # fused: non-wire stats (diag / unit-wise, never
+                # wire-captured) stay on the exact dense path
+                v = jax.lax.psum_scatter(v, axes, scatter_dimension=0,
+                                         tiled=True)
+            elif self.comm.strategy == "hier":
+                v = self._hier(v, axes, symmetric=self.sym_fn(fam, key))
+            else:
+                v = self._ring(v, axes, symmetric=self.sym_fn(fam, key))
+            rest = tuple(a for a in self.dp if a not in axes)
+            if rest:
+                v = jax.lax.psum(v, rest)
+            return v
 
     def reduce(self, raw: dict) -> dict:
         """Reduce a whole raw-statistics tree ({family: {key: array}})."""
@@ -552,16 +557,18 @@ class FactorReducer:
         matches ``psum_scatter(tiled=True)`` ownership, so gather(invert(
         scatter(x))) is a layout round-trip for every strategy."""
         from repro.core import kfac
+        from repro.obs.tracing import STAGE_GATHER
         if not axes:
             return v
-        sym = self.sym_fn(fam, key) and v.ndim >= 3 \
-            and v.shape[-1] == v.shape[-2]
-        b = v.shape[-1] if sym else 0
-        if sym:
-            v = kfac.sym_pack(v.astype(jnp.float32))   # wire = triangle only
-        an = axes if len(axes) > 1 else axes[0]
-        v = jax.lax.all_gather(v, an, axis=0, tiled=True)
-        return kfac.sym_unpack(v, b) if sym else v
+        with jax.named_scope(f"{STAGE_GATHER}[{fam}.{key}]"):
+            sym = self.sym_fn(fam, key) and v.ndim >= 3 \
+                and v.shape[-1] == v.shape[-2]
+            b = v.shape[-1] if sym else 0
+            if sym:
+                v = kfac.sym_pack(v.astype(jnp.float32))  # wire = triangle
+            an = axes if len(axes) > 1 else axes[0]
+            v = jax.lax.all_gather(v, an, axis=0, tiled=True)
+            return kfac.sym_unpack(v, b) if sym else v
 
     # ---- the ring ----
 

@@ -124,11 +124,13 @@ class Stage4Inverter:
 
         from repro.kernels import dispatch
         from repro.launch import compat
+        from repro.obs.tracing import STAGE_INVERSE
 
         axes = self.reducer.scatter_axes(stat.shape[0]) \
             if stat.ndim >= 3 else ()
         if not axes or self.reducer.group_size(axes) <= 1:
-            return self._replicated(stat, damp, return_info)
+            with jax.named_scope(f"{STAGE_INVERSE}[replicated:{fam}.{key}]"):
+                return self._replicated(stat, damp, return_info)
 
         reducer, mesh = self.reducer, self.mesh
         method, backend = self.method, self.backend
@@ -164,4 +166,5 @@ class Stage4Inverter:
         sm = compat.shard_map(local, mesh=mesh,
                               in_specs=(stat_spec, damp_spec),
                               out_specs=out_specs, axis_names=set(axes))
-        return sm(stat, damp)
+        with jax.named_scope(f"{STAGE_INVERSE}[sharded:{fam}.{key}]"):
+            return sm(stat, damp)

@@ -70,6 +70,13 @@ class NGDConfig:
                                      # still consumes the previous buffer
                                      # (paper §5.2 overlap; the staleness
                                      # itself is still Algorithm 2's)
+    inverse_info: bool = False       # surface per-block Stage-4 inversion
+                                     # diagnostics (ns_res / ns_converged)
+                                     # in step metrics["inverse_info"] —
+                                     # blocks not refreshed this step carry
+                                     # the ns_res=-1 sentinel (repro.obs
+                                     # consumes this; off by default so the
+                                     # metric tree is unchanged)
 
 
 def _dense_leaf_shape(leaf) -> tuple:
@@ -92,14 +99,21 @@ def _mean_eig(stat: jax.Array, kind: str, d: int) -> jax.Array:
 def _damped_inv(stat: jax.Array, kind: str, damp: jax.Array,
                 method: str, backend: str = "auto",
                 ns_iters: int = kfac.NS_ITERS,
-                ns_tol: float = kfac.NS_TOL) -> jax.Array:
-    """Apply-ready inverse: blocked matrix inverse or elementwise 1/(x+d)."""
+                ns_tol: float = kfac.NS_TOL,
+                return_info: bool = False):
+    """Apply-ready inverse: blocked matrix inverse or elementwise 1/(x+d).
+
+    ``return_info=True`` additionally returns the dispatch layer's
+    per-block ``{"ns_res", "ns_converged"}`` for full-kind stats (None for
+    the elementwise kinds, which have no fallback to report)."""
     if kind == "full":
         from repro.kernels import dispatch
         return dispatch.damped_inverse(stat, damp[..., None], method=method,
                                        ns_iters=ns_iters, ns_tol=ns_tol,
-                                       backend=backend)  # bcast over blocks
-    return 1.0 / (jnp.maximum(stat, 0.0) + damp[..., None])
+                                       backend=backend,
+                                       return_info=return_info)  # bcast over blocks
+    inv = 1.0 / (jnp.maximum(stat, 0.0) + damp[..., None])
+    return (inv, None) if return_info else inv
 
 
 class SPNGD:
@@ -327,8 +341,16 @@ class SPNGD:
         any_flag = functools.reduce(
             jnp.logical_or, [flags[f"{fam}.{k}"] for k in raw], jnp.asarray(False))
 
+        # which stats carry per-block inversion diagnostics: the full-kind
+        # a/g factors (static set — the cond's branch trees must match)
+        want_info = cfg.inverse_info
+        info_keys = [k for k in ("a", "g") if k in normalized and
+                     (info.spec.a_kind if k == "a" else
+                      info.spec.g_kind) == "full"] if want_info else []
+
         def recompute(_):
-            pc = {}
+            from repro.obs.tracing import STAGE_INVERSE
+            pc, inv_info = {}, {}
             if "a" in normalized or "g" in normalized:
                 a = normalized.get("a")
                 g = normalized.get("g")
@@ -340,12 +362,18 @@ class SPNGD:
                     pi = jnp.ones(a.shape[:len(info.lead)] if a is not None
                                   else g.shape[:len(info.lead)])
                 sl = jnp.sqrt(jnp.asarray(lam, jnp.float32))
-                if a is not None:
-                    pc["a"] = self._stat_inverse(fam, "a", a,
-                                                 info.spec.a_kind, pi * sl)
-                if g is not None:
-                    pc["g"] = self._stat_inverse(fam, "g", g,
-                                                 info.spec.g_kind, sl / pi)
+                with jax.named_scope(STAGE_INVERSE):
+                    for key, stat, d in (("a", a, pi * sl), ("g", g, sl / pi)):
+                        if stat is None:
+                            continue
+                        kind = (info.spec.a_kind if key == "a"
+                                else info.spec.g_kind)
+                        if key in info_keys:
+                            pc[key], inv_info[key] = self._stat_inverse(
+                                fam, key, stat, kind, d, want_info=True)
+                        else:
+                            pc[key] = self._stat_inverse(fam, key, stat,
+                                                         kind, d)
             for key in ("d", "uw"):
                 if key in normalized:
                     pc[key] = normalized[key]
@@ -353,12 +381,21 @@ class SPNGD:
                 # full BN Fisher (2C x 2C): invert directly with lam damping
                 pc["uwf"] = kfac.damped_inverse(
                     normalized["uwf"], jnp.asarray(lam, jnp.float32))
-            return pc
+            return pc, inv_info
 
         def keep(_):
-            return curv["precond_next" if cfg.double_buffer else "precond"]
+            # not-refreshed sentinels: ns_res=-1 (no inversion ran this
+            # step), converged=True — shape-matched to recompute's info so
+            # the cond branches return identical pytrees
+            inv_info = {k: {"ns_res": jnp.full(normalized[k].shape[:-2],
+                                               -1.0, jnp.float32),
+                            "ns_converged": jnp.full(
+                                normalized[k].shape[:-2], True)}
+                        for k in info_keys}
+            return curv["precond_next" if cfg.double_buffer else "precond"], \
+                inv_info
 
-        precond = jax.lax.cond(any_flag, recompute, keep, None)
+        precond, inv_info = jax.lax.cond(any_flag, recompute, keep, None)
         if cfg.double_buffer:
             # pipeline: the fresh inverses are STAGED (precond_next) and the
             # buffer staged by the latest earlier refresh activates for this
@@ -371,19 +408,32 @@ class SPNGD:
             out["prev2"] = new_prev2
         else:
             out["prev2"] = curv["prev2"]
-        return out, sims
+        return out, sims, inv_info
 
     def _stat_inverse(self, fam: str, key: str, stat: jax.Array, kind: str,
-                      damp: jax.Array) -> jax.Array:
+                      damp: jax.Array, want_info: bool = False):
         """One factor's Stage-4 inverse: shard-local + all-gather when a
         :class:`~repro.comm.Stage4Inverter` is attached (full-kind factors
         only — diagonal kinds are elementwise and not worth a collective),
-        the replicated path otherwise."""
+        the replicated path otherwise.
+
+        ``want_info=True`` returns ``(inv, info)`` where info is the
+        per-block ``{"ns_res", "ns_converged"}`` dict (None for non-full
+        kinds). The sharded path's extra ``owner`` vector is dropped so the
+        info pytree is identical across both Stage-4 call sites — the
+        refresh ``lax.cond`` requires matched branch trees."""
         cfg = self.cfg
         if kind == "full" and self.stage4 is not None:
-            return self.stage4.invert(stat, damp, fam=fam, key=key)
-        return _damped_inv(stat, kind, damp, cfg.inverse_method, cfg.backend,
-                           cfg.ns_iters, cfg.ns_tol)
+            out = self.stage4.invert(stat, damp, fam=fam, key=key,
+                                     return_info=want_info)
+            if not want_info:
+                return out
+            inv, info = out
+            return inv, {"ns_res": info["ns_res"],
+                         "ns_converged": info["ns_converged"]}
+        out = _damped_inv(stat, kind, damp, cfg.inverse_method, cfg.backend,
+                          cfg.ns_iters, cfg.ns_tol, return_info=want_info)
+        return out
 
     # ---- preconditioned update for one family ----
 
@@ -430,12 +480,15 @@ class SPNGD:
 
     # ---- full update assembly ----
 
-    def _finish(self, params, state, grads, curv, lam, lr, mom, loss, aux, sims):
+    def _finish(self, params, state, grads, curv, lam, lr, mom, loss, aux,
+                sims, inverse_info: Optional[dict] = None):
+        from repro.obs.tracing import STAGE_PRECOND
         cfg = self.cfg
         # preconditioned updates for sited params
         updates = {}
-        for fam, c in curv.items():
-            updates.update(self._apply_precond(fam, grads, c, lam))
+        with jax.named_scope(STAGE_PRECOND):
+            for fam, c in curv.items():
+                updates.update(self._apply_precond(fam, grads, c, lam))
 
         sited = set(updates)
 
@@ -448,8 +501,11 @@ class SPNGD:
         flat_p = _flatten_paths(params)
         flat_v = _flatten_paths(state["velocity"])
         new_p, new_v = {}, {}
+        gsq = usq = jnp.zeros((), jnp.float32)
         for path_str, g in flat_g.items():
             u = leaf_update(path_str, g)
+            gsq += jnp.sum(jnp.square(g.astype(jnp.float32)))
+            usq += jnp.sum(jnp.square(u.astype(jnp.float32)))
             v = mom * flat_v[path_str] - lr * u.astype(flat_v[path_str].dtype)
             w = flat_p[path_str] + v.astype(flat_p[path_str].dtype)
             new_v[path_str] = v
@@ -472,7 +528,10 @@ class SPNGD:
         vel_out = _unflatten_paths(new_v, like=params)
         state_out = {"step": state["step"] + 1, "velocity": vel_out,
                      "curv": curv}
-        metrics = {"loss": loss, "sims": sims}
+        metrics = {"loss": loss, "sims": sims,
+                   "grad_norm": jnp.sqrt(gsq), "update_norm": jnp.sqrt(usq)}
+        if inverse_info:
+            metrics["inverse_info"] = inverse_info
         if isinstance(aux, dict):
             metrics.update({k: v for k, v in aux.items()
                             if isinstance(v, jax.Array) and v.ndim == 0})
@@ -483,22 +542,27 @@ class SPNGD:
         """One backward pass: (loss, aux, grads, raw factor sums). Exposed
         separately so the launch layer can accumulate over microbatches —
         the paper's own method for mimicking BS=65K/131K (§7.1)."""
+        from repro.obs.tracing import STAGE_CAPTURE
         fstats = self.fstats_fn()
-        if self.cfg.estimator == "1mc":
-            return mc_fisher_grads(self.loss_fn, params, fstats, batch, rng)
-        return emp_fisher_grads(self.loss_fn, params, fstats, batch)
+        with jax.named_scope(STAGE_CAPTURE):
+            if self.cfg.estimator == "1mc":
+                return mc_fisher_grads(self.loss_fn, params, fstats, batch,
+                                       rng)
+            return emp_fisher_grads(self.loss_fn, params, fstats, batch)
 
     def apply_update(self, params, state, grads, raw, counts, flags,
                      lam, lr, mom, loss, aux):
         """Refresh curvature from raw sums (per ``flags``) + apply Eq. 23."""
-        curv, sims = {}, {}
+        curv, sims, inv_info = {}, {}, {}
         for fam in raw:
             n_a, n_g = counts[fam]
-            curv[fam], s = self._refresh_family(
+            curv[fam], s, fi = self._refresh_family(
                 fam, raw[fam], state["curv"][fam], flags, lam, n_a, n_g)
             sims.update(s)
+            for key, v in fi.items():
+                inv_info[f"{fam}.{key}"] = v
         return self._finish(params, state, grads, curv, lam, lr, mom,
-                            loss, aux, sims)
+                            loss, aux, sims, inverse_info=inv_info)
 
     def step(self, params, state, batch, flags: dict, lam, lr, mom,
              rng: Optional[jax.Array] = None):

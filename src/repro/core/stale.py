@@ -95,6 +95,9 @@ class IntervalController:
         self.dense_gather_bytes = 0
         self.comm_info: dict = {}                 # reducer tally (record_comm)
         self.steps = 0
+        # drain() snapshot: cumulative counter values already handed out, so
+        # per-step JSONL deltas sum back to the totals exactly
+        self._drained: dict[str, float] = {}
 
     def flags(self, t: int) -> dict[str, bool]:
         """Which statistics must refresh at step t (Algorithm 1's t == t_X)."""
@@ -165,6 +168,7 @@ class IntervalController:
             "total_gather_bytes": self.total_gather_bytes,
             "dense_gather_bytes": self.dense_gather_bytes,
             "comm_info": dict(self.comm_info),
+            "drained": dict(self._drained),
             "stats": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
 
@@ -187,6 +191,10 @@ class IntervalController:
         ctrl.total_gather_bytes = state.get("total_gather_bytes", 0)
         ctrl.dense_gather_bytes = state.get("dense_gather_bytes", 0)
         ctrl.comm_info = dict(state.get("comm_info", {}))
+        # pre-PR-8 checkpoints have no drain snapshot: next drain() re-emits
+        # everything accumulated so far, which keeps the sum-of-drains ==
+        # totals invariant across the resume
+        ctrl._drained = dict(state.get("drained", {}))
         for n, s in state["stats"].items():
             ctrl.stats[n] = StatState(**s)
         return ctrl
@@ -224,6 +232,52 @@ class IntervalController:
             },
             "per_stat": {n: dataclasses.asdict(s) for n, s in self.stats.items()},
         }
+
+    # ---- flat / streaming views (JSONL emission; repro.obs) ----
+
+    def counters(self) -> dict[str, int]:
+        """The cumulative integer counters, flat. Every value in
+        :meth:`summary` that monotonically accumulates appears here under
+        its summary name (per-level comm totals included), plus the derived
+        ``refresh_events`` (sum of per-stat refresh counts)."""
+        return {
+            "steps": self.steps,
+            "total_stat_bytes": self.total_bytes,
+            "dense_stat_bytes": self.dense_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+            "dense_wire_bytes": self.dense_wire_bytes,
+            "total_wire_intra_bytes": self.total_wire_intra_bytes,
+            "dense_wire_intra_bytes": self.dense_wire_intra_bytes,
+            "total_wire_inter_bytes": self.total_wire_inter_bytes,
+            "dense_wire_inter_bytes": self.dense_wire_inter_bytes,
+            "total_gather_bytes": self.total_gather_bytes,
+            "dense_gather_bytes": self.dense_gather_bytes,
+            "refresh_events": sum(s.refresh_count for s in self.stats.values()),
+        }
+
+    def summary_flat(self) -> dict:
+        """:meth:`summary` flattened to one ``dict[str, int | float]`` for
+        direct JSONL emission: the counters, both reduction rates, and any
+        numeric reducer-tally entries. No nested values."""
+        flat: dict = dict(self.counters())
+        flat["reduction_rate"] = self.reduction_rate()
+        flat["wire_reduction_rate"] = (
+            self.total_wire_bytes / self.dense_wire_bytes
+            if self.dense_wire_bytes else 1.0)
+        for k, v in self.comm_info.items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                flat[f"comm_{k}"] = v
+        return flat
+
+    def drain(self) -> dict[str, int]:
+        """Deltas of :meth:`counters` since the previous drain. Summing every
+        drained dict over a run reproduces the cumulative counters exactly —
+        the per-step JSONL events are a lossless decomposition of the ledger
+        (pinned by tests/test_obs.py)."""
+        cur = self.counters()
+        out = {k: v - self._drained.get(k, 0) for k, v in cur.items()}
+        self._drained = cur
+        return out
 
 
 def sym_packed_bytes(shape: tuple, dtype_bytes: int = 4) -> int:

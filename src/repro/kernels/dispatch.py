@@ -67,6 +67,18 @@ def lookup(op: str, backend: str) -> Callable:
     return impls.get(backend, impls["ref"])
 
 
+def _call(op: str, which: str, *args, **kwargs):
+    """Invoke the resolved implementation under a stable trace-viewer scope
+    (``repro.kernels.<op>[<backend>]``, :func:`repro.obs.tracing
+    .kernel_scope`) so a ref-vs-pallas A/B of the same op lines up by name
+    in a captured profile. Kept as a separate step from :func:`lookup` so
+    tests that spy on lookup still observe every dispatch."""
+    from repro.obs.tracing import kernel_scope
+    fn = lookup(op, which)
+    with kernel_scope(op, which):
+        return fn(*args, **kwargs)
+
+
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
@@ -123,7 +135,7 @@ def factor_sum(x: jax.Array, max_dim: int, *,
     from repro.core import kfac
     b = kfac.block_size(x.shape[-1], max_dim)
     which = resolve(backend, b, x.shape[-2])
-    return lookup("factor_sum", which)(x, max_dim)
+    return _call("factor_sum", which, x, max_dim)
 
 
 # ---------------------------------------------------------------------------
@@ -170,7 +182,7 @@ def factor_sum_wire(x: jax.Array, max_dim: int, *, fmt: str = "e4m3",
     from repro.core import kfac
     b = kfac.block_size(x.shape[-1], max_dim)
     which = resolve(backend, b, x.shape[-2])
-    return lookup("factor_sum_wire", which)(x, max_dim, fmt, scale_mode)
+    return _call("factor_sum_wire", which, x, max_dim, fmt, scale_mode)
 
 
 # ---------------------------------------------------------------------------
@@ -203,7 +215,7 @@ def block_precond_left(binv: jax.Array, w: jax.Array, *,
                        backend: str | None = None) -> jax.Array:
     """Apply blocked inverse from the left (the ``A^-1 dW`` half)."""
     which = resolve(backend, binv.shape[-1], w.shape[-1])
-    return lookup("block_precond_left", which)(binv, w)
+    return _call("block_precond_left", which, binv, w)
 
 
 # ---------------------------------------------------------------------------
@@ -226,7 +238,7 @@ def block_precond_right(w: jax.Array, binv: jax.Array, *,
                         backend: str | None = None) -> jax.Array:
     """Apply blocked inverse from the right (the ``dW G^-1`` half)."""
     which = resolve(backend, binv.shape[-1], w.shape[-3])
-    return lookup("block_precond_right", which)(w, binv)
+    return _call("block_precond_right", which, w, binv)
 
 
 # ---------------------------------------------------------------------------
@@ -326,8 +338,8 @@ def damped_inverse(f: jax.Array, damping, *, method: str = "eigh",
     (and any monitoring hook's) view of which blocks took the eigh
     fallback; for the direct methods the residual is identically zero."""
     which = resolve(backend, f.shape[-1])
-    inv, res = lookup("damped_inverse", which)(f, damping, method,
-                                               ns_iters, ns_tol)
+    inv, res = _call("damped_inverse", which, f, damping, method,
+                      ns_iters, ns_tol)
     if return_info:
         return inv, {"ns_res": res, "ns_converged": res <= ns_tol}
     return inv
@@ -362,7 +374,7 @@ def fp8_pack(f: jax.Array, *, fmt: str = "e4m3", scale_mode: str = "fp32",
     """Quantize + sym-pack a symmetric blocked factor; §4.3 history and
     §5.2 payload compression on top of triangular packing."""
     which = resolve(backend, f.shape[-1])
-    return lookup("fp8_pack", which)(f, fmt, scale_mode)
+    return _call("fp8_pack", which, f, fmt, scale_mode)
 
 
 def _fp8_unpack_ref(payload, scale, b: int):
@@ -382,7 +394,7 @@ def fp8_unpack(payload: jax.Array, scale: jax.Array, b: int, *,
     """Dequantize-on-read: packed fp8 payload -> dense symmetric f32
     (..., b, b) blocks."""
     which = resolve(backend, b)
-    return lookup("fp8_unpack", which)(payload, scale, b)
+    return _call("fp8_unpack", which, payload, scale, b)
 
 
 # ---------------------------------------------------------------------------
@@ -408,7 +420,7 @@ def ring_hop_pack(rows: jax.Array, *, fmt: str = "e4m3",
                   scale_mode: str = "fp32", backend: str | None = None):
     """Quantize one ring hop's partial-sum rows to the fp8 wire format."""
     which = resolve(backend, rows.shape[-1])
-    return lookup("ring_hop_pack", which)(rows, fmt, scale_mode)
+    return _call("ring_hop_pack", which, rows, fmt, scale_mode)
 
 
 def _ring_hop_unpack_ref(payload, scale):
@@ -425,7 +437,7 @@ def ring_hop_unpack(payload: jax.Array, scale: jax.Array, *,
                     backend: str | None = None) -> jax.Array:
     """Dequantize a received hop payload back to the f32 accumulator."""
     which = resolve(backend, payload.shape[-1])
-    return lookup("ring_hop_unpack", which)(payload, scale)
+    return _call("ring_hop_unpack", which, payload, scale)
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +461,7 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     # standard head dims (64) would never pass the generic contraction-dim
     # threshold
     which = resolve(backend, q.shape[-2])
-    return lookup("swa_attention", which)(q, k, v, window)
+    return _call("swa_attention", which, q, k, v, window)
 
 
 # ---------------------------------------------------------------------------
@@ -497,7 +509,7 @@ def swa_attention_fwd_res(q: jax.Array, k: jax.Array, v: jax.Array, *,
                           window: int = 0, backend: str | None = None):
     """Training forward: returns (out, lse) in the GQA layout above."""
     which = resolve(backend, q.shape[-2])
-    return lookup("swa_attention_fwd_res", which)(q, k, v, window)
+    return _call("swa_attention_fwd_res", which, q, k, v, window)
 
 
 def swa_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -505,7 +517,7 @@ def swa_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
                       window: int = 0, backend: str | None = None):
     """Fused backward from residuals: returns (dq, dk, dv), all f32."""
     which = resolve(backend, q.shape[-2])
-    return lookup("swa_attention_bwd", which)(q, k, v, o, lse, do, window)
+    return _call("swa_attention_bwd", which, q, k, v, o, lse, do, window)
 
 
 # ---------------------------------------------------------------------------

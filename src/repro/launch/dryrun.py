@@ -473,6 +473,10 @@ def main():
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
                     help="Algorithm 1 no-refresh steady-state step")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="write one dryrun_case event per record (plus "
+                         "per-case spans and the console mirror) to this "
+                         "JSONL stream (repro.obs.MetricsLogger)")
     args = ap.parse_args()
     if args.comm_strategy != "dense" and args.schedule != "shardmap":
         # the GSPMD-auto schedule has no explicit Stage-3 collective; a
@@ -511,6 +515,8 @@ def main():
         variant += f"__chunk{args.rwkv_chunk}"
     if args.fast:
         variant += "__fast"
+    from repro.obs import MetricsLogger
+    log = MetricsLogger(args.metrics_jsonl)
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
@@ -518,31 +524,38 @@ def main():
                        f"{variant}")
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
-                    print(f"[skip] {tag}")
+                    log.console(f"[skip] {tag}")
                     continue
                 hlo_path = (os.path.join(args.out, tag + ".hlo.txt")
                             if args.save_hlo else None)
-                rec = run_case(arch, shape, mp, save_hlo=hlo_path,
-                               schedule=args.schedule, tp_align=args.tp_align,
-                               rwkv_chunk=args.rwkv_chunk, fast=args.fast,
-                               backend=args.backend,
-                               factor_dtype=args.factor_dtype,
-                               inverse_method=args.inverse_method,
-                               comm_strategy=args.comm_strategy,
-                               wire_dtype=args.wire_dtype,
-                               devices_per_host=args.devices_per_host,
-                               inverse_sharding=args.inverse_sharding)
+                with log.span(f"dryrun.{tag}"):
+                    rec = run_case(arch, shape, mp, save_hlo=hlo_path,
+                                   schedule=args.schedule,
+                                   tp_align=args.tp_align,
+                                   rwkv_chunk=args.rwkv_chunk,
+                                   fast=args.fast,
+                                   backend=args.backend,
+                                   factor_dtype=args.factor_dtype,
+                                   inverse_method=args.inverse_method,
+                                   comm_strategy=args.comm_strategy,
+                                   wire_dtype=args.wire_dtype,
+                                   devices_per_host=args.devices_per_host,
+                                   inverse_sharding=args.inverse_sharding)
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
+                log.emit("dryrun_case", tag=tag,
+                         **{k: v for k, v in rec.items()
+                            if k != "traceback"})
                 status = rec["status"]
                 extra = ("" if status != "ok" else
                          f" flops={rec['hlo_flops']:.3g}"
                          f" coll={rec['collective_bytes']:.3g}B"
                          f" bottleneck={rec['bottleneck']}"
                          f" compile={rec['compile_s']}s")
-                print(f"[{status}] {tag}{extra}", flush=True)
+                log.console(f"[{status}] {tag}{extra}")
                 if status != "ok":
-                    print(rec["error"], flush=True)
+                    log.console(rec["error"])
+    log.close()
 
 
 if __name__ == "__main__":

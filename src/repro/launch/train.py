@@ -282,6 +282,76 @@ def make_prefill_step(model) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# overhead-accounting probe (repro.obs; make_report.py's decomposition input)
+# ---------------------------------------------------------------------------
+
+def _probe_time(fn, *args, iters: int = 3) -> float:
+    """Median wall-µs of ``fn(*args)`` after one compile+warm call."""
+    import time as _time
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = _time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((_time.perf_counter() - t0) * 1e6)
+    return sorted(ts)[len(ts) // 2]
+
+
+def _overhead_probe(opt, step_j, fast_j, params, state, batch, args,
+                    lr_fn, log) -> None:
+    """Time the step's stage-isolated building blocks and emit one ``probe``
+    event. The monolithic jitted step cannot be decomposed from its own
+    wall time, so the probe measures four nested programs — forward/backward
+    only, +Stage-2 capture, the fast step, the all-flags refresh step — plus
+    a per-factor Stage-4 inversion stand-in (the dryrun ``stage4_report``
+    recipe). ``make_report.py`` combines these with the metrics stream's
+    measured refresh frequency into the paper's overhead-decomposition
+    table (fraction of step time in Stage 2/3/4 vs forward/backward)."""
+    import numpy as np
+
+    from repro.core.ngd import _dense_leaf_shape
+    from repro.kernels import dispatch
+
+    lr0 = lr_fn(0)
+    mom0 = 0.9 * lr0 / args.lr
+    lam = args.damping
+
+    fwd_bwd_j = jax.jit(lambda p, b: jax.value_and_grad(
+        opt.loss_fn, has_aux=True)(p, None, b))
+    capture_j = jax.jit(lambda p, b: opt.grads_and_raw(p, b))
+    all_on = {k: jnp.asarray(True) for k in opt.stat_names()}
+
+    fwd_bwd_us = _probe_time(fwd_bwd_j, params, batch)
+    capture_us = _probe_time(capture_j, params, batch)
+    fast_us = _probe_time(fast_j, params, state, batch, lam, lr0, mom0)
+    refresh_us = _probe_time(step_j, params, state, batch, all_on,
+                             lam, lr0, mom0)
+
+    # Stage-4 inversion in isolation: one damped_inverse per full-kind
+    # factor on an SPD stand-in shaped like the real statistic
+    rng = np.random.RandomState(0)
+    inv_per_stat = {}
+    for fam, stats in jax.eval_shape(opt.fstats_fn).items():
+        for key, leaf in stats.items():
+            if key not in ("a", "g") or not opt.sym_stat(fam, key):
+                continue
+            shape = _dense_leaf_shape(leaf)
+            b = shape[-1]
+            m = rng.randn(*shape[:-1], b).astype(np.float32)
+            spd = jnp.asarray(m @ np.swapaxes(m, -1, -2) / b
+                              + 0.1 * np.eye(b, dtype=np.float32))
+            fn = jax.jit(lambda s: dispatch.damped_inverse(
+                s, jnp.asarray(lam, jnp.float32),
+                method=opt.cfg.inverse_method, ns_iters=opt.cfg.ns_iters,
+                ns_tol=opt.cfg.ns_tol, backend=opt.cfg.backend))
+            inv_per_stat[f"{fam}.{key}"] = _probe_time(fn, spd, iters=1)
+    log.emit("probe", fwd_bwd_us=fwd_bwd_us, capture_us=capture_us,
+             fast_us=fast_us, refresh_us=refresh_us,
+             inverse_us=sum(inv_per_stat.values()),
+             inverse_us_per_stat=inv_per_stat)
+
+
+# ---------------------------------------------------------------------------
 # CLI launcher: train any --arch (reduced) on the synthetic LM task
 # ---------------------------------------------------------------------------
 
@@ -362,11 +432,32 @@ def main():
                          "buffer (Algorithm 2 still governs staleness)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
+                    help="write the per-step JSONL event stream here "
+                         "(repro.obs.MetricsLogger): loss/lr/norms, refresh "
+                         "decisions, drained comm-ledger bytes, NS/eigh "
+                         "inversion tallies, step-time EMA + p50/p99. "
+                         "Console text is unchanged (and mirrored into the "
+                         "stream); disabled = zero-cost no-op")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the first "
+                         "--profile-steps steps into DIR (stage scopes "
+                         "spngd.stage*.* and kernel scopes "
+                         "repro.kernels.*[backend] name the regions)")
+    ap.add_argument("--profile-steps", type=int, default=3,
+                    help="length of the --profile-dir capture window")
+    ap.add_argument("--no-overhead-probe", action="store_true",
+                    help="skip the stage-isolated timing probe that "
+                         "metrics-enabled runs emit for make_report.py's "
+                         "overhead-accounting table")
     args = ap.parse_args()
 
     import dataclasses
 
     from repro.core.ngd import NGDConfig, SPNGD
+    from repro.obs import MetricsLogger, ProfileCapture, inverse_tally
+
+    log = MetricsLogger(args.metrics_jsonl)
     cfg = get_config(args.arch)
     if not args.full_config:
         cfg = cfg.reduced()
@@ -374,8 +465,9 @@ def main():
     model = DecoderLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={args.arch} ({'full' if args.full_config else 'reduced'}), "
-          f"{n / 1e6:.1f}M params")
+    log.console(f"arch={args.arch} "
+                f"({'full' if args.full_config else 'reduced'}), "
+                f"{n / 1e6:.1f}M params")
 
     inverse_sharding = args.inverse_sharding
     double_buffer = args.double_buffer or inverse_sharding
@@ -385,7 +477,10 @@ def main():
                           inverse_method=args.inverse_method,
                           factor_dtype=FACTOR_DTYPES[args.factor_dtype],
                           inverse_sharding=inverse_sharding,
-                          double_buffer=double_buffer))
+                          double_buffer=double_buffer,
+                          # metrics runs surface per-block Stage-4
+                          # diagnostics; default runs keep the seed tree
+                          inverse_info=log.enabled))
     state = opt.init(params)
     comm_cfg = comm_lib.make_comm_config(args.comm_strategy, args.wire_dtype,
                                          backend=args.backend,
@@ -407,11 +502,41 @@ def main():
     step_j = jax.jit(make_train_step(model, opt, accum=args.accum))
     fast_j = jax.jit(make_fast_step(model, opt, accum=args.accum))
 
+    log.emit("run_config", arch=args.arch, full_config=args.full_config,
+             n_params=int(n), steps=args.steps, batch=args.batch,
+             seq=args.seq, accum=args.accum, lr=args.lr,
+             damping=args.damping, backend=args.backend,
+             factor_dtype=args.factor_dtype,
+             inverse_method=args.inverse_method,
+             comm_strategy=comm_cfg.strategy,
+             wire_dtype=comm_cfg.wire_dtype,
+             inverse_sharding=inverse_sharding,
+             double_buffer=double_buffer)
+    # per-block-size Stage-4 tallies need each stat's block size, which the
+    # on-device info arrays don't carry — read it off the stats template
+    block_sizes = {}
+    from repro.core.ngd import _dense_leaf_shape
+    for fam, stats in jax.eval_shape(opt.fstats_fn).items():
+        for key, leaf in stats.items():
+            if key in ("a", "g") and opt.sym_stat(fam, key):
+                block_sizes[f"{fam}.{key}"] = _dense_leaf_shape(leaf)[-1]
+    if log.enabled and not args.no_overhead_probe:
+        # dedicated generator: the probe must not advance the training
+        # stream (a metrics run sees the same batches as a default run)
+        probe_batch = next(token_batches(cfg.vocab, args.batch, args.seq,
+                                         seed=1))
+        _overhead_probe(opt, step_j, fast_j, params, state, probe_batch,
+                        args, lr_fn, log)
+    prof = ProfileCapture(args.profile_dir, steps=args.profile_steps)
+
+    import time as _time
     for t in range(1, args.steps + 1):
         batch = next(data)
         lr = lr_fn(t - 1)
         mom = 0.9 * lr / args.lr
         flags = ctrl.flags(t)
+        prof.step_start(t)
+        t0 = _time.perf_counter()
         if any(flags.values()):
             jflags = {k: jnp.asarray(v) for k, v in flags.items()}
             params, state, m = step_j(params, state, batch, jflags,
@@ -422,18 +547,39 @@ def main():
             params, state, m = fast_j(params, state, batch,
                                       args.damping, lr, mom)
             ctrl.update(t, flags, {})
+        if log.enabled:
+            jax.block_until_ready(m["loss"])
+            dt = _time.perf_counter() - t0
+            evt = {"kind": "refresh" if any(flags.values()) else "fast",
+                   "lr": lr, "mom": mom,
+                   "n_refreshed": sum(flags.values()),
+                   "n_stats": len(flags),
+                   "refreshed": sorted(k for k, v in flags.items() if v),
+                   "grad_norm": float(m["grad_norm"]),
+                   "update_norm": float(m["update_norm"]),
+                   "comm": ctrl.drain()}
+            if "inverse_info" in m:
+                evt["inverse"] = inverse_tally(m["inverse_info"],
+                                               block_sizes)
+            log.log_step(t, loss=float(m["loss"]), dt=dt, **evt)
+        prof.step_end(t)
         if t % 10 == 0 or t == 1:
-            print(f"step {t:4d} loss {float(m['loss']):.4f} lr {lr:.4f} "
-                  f"refresh {sum(flags.values())}/{len(flags)}", flush=True)
+            log.console(f"step {t:4d} loss {float(m['loss']):.4f} "
+                        f"lr {lr:.4f} "
+                        f"refresh {sum(flags.values())}/{len(flags)}")
+    prof.stop()
     s = ctrl.summary()
-    print(f"statistic traffic: {100 * s['reduction_rate']:.1f}% of dense; "
-          f"modelled wire [{comm_cfg.strategy}/{comm_cfg.wire_dtype}]: "
-          f"{s['comm']['total_wire_bytes']} B "
-          f"({100 * s['comm']['wire_reduction_rate']:.1f}% of "
-          f"refresh-every-step)")
+    log.console(f"statistic traffic: {100 * s['reduction_rate']:.1f}% of "
+                f"dense; "
+                f"modelled wire [{comm_cfg.strategy}/{comm_cfg.wire_dtype}]: "
+                f"{s['comm']['total_wire_bytes']} B "
+                f"({100 * s['comm']['wire_reduction_rate']:.1f}% of "
+                f"refresh-every-step)")
     if inverse_sharding:
-        print(f"modelled Stage-4 gather (sym-packed f32): "
-              f"{s['comm']['total_gather_bytes']} B")
+        log.console(f"modelled Stage-4 gather (sym-packed f32): "
+                    f"{s['comm']['total_gather_bytes']} B")
+    log.emit("summary", **ctrl.summary_flat())
+    log.close()
 
 
 if __name__ == "__main__":

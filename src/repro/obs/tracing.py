@@ -1,0 +1,150 @@
+"""Stage-level tracing: host-side spans + device-trace annotations.
+
+The paper's negligible-overhead claim (§5.2) is a *time-accounting* claim:
+Stage-2 statistics construction, the Stage-3 ReduceScatterV and the Stage-4
+inversions must disappear behind the forward/backward. This module gives
+every SP-NGD stage a stable name in both timelines:
+
+* :class:`Span` — a host-side phase timer (``time.perf_counter``) that also
+  opens a ``jax.profiler.TraceAnnotation``, so the same phase shows up in a
+  captured profiler trace. Spans nest; each records its depth and parent,
+  which is what the metrics stream's ``span`` events carry.
+* :func:`stage_scope` — ``jax.named_scope`` around *traced* code. Zero
+  runtime cost (it only attaches HLO metadata at trace time) and it is what
+  makes the four stages findable in a trace viewer regardless of how XLA
+  fuses them. The canonical stage names are the ``STAGE_*`` constants —
+  instrumentation sites must use them so traces stay comparable across PRs.
+* :func:`kernel_scope` — the per-op/backend scope the kernel dispatch layer
+  opens, so a ``ref`` vs ``pallas`` A/B of the same op lines up by name in
+  the viewer (``repro.kernels.damped_inverse[pallas]`` vs ``[...ref]``).
+* :class:`ProfileCapture` — the opt-in ``--profile-dir`` window: a real
+  ``jax.profiler`` trace of the first N steps, started/stopped from the
+  training loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+
+# Canonical scope names for the four SP-NGD stages (paper Fig. 2 / §5).
+# Stage 1-2 (forward/backward + statistics capture) trace as one scope:
+# capture rides the backward's saved activations, so they are one program
+# region; the fast (no-capture) step simply never opens it.
+STAGE_CAPTURE = "spngd.stage2.capture"     # grads + raw factor sums
+STAGE_REDUCE = "spngd.stage3.reduce"       # factor ReduceScatterV
+STAGE_INVERSE = "spngd.stage4.inverse"     # damped factor inversion
+STAGE_GATHER = "spngd.stage4.gather"       # preconditioner all-gather
+STAGE_PRECOND = "spngd.stage4.precond"     # A^-1 dW G^-1 apply
+
+
+def stage_scope(name: str):
+    """``jax.named_scope`` under the canonical stage name — free at runtime,
+    names the region in HLO metadata / trace viewers."""
+    return jax.named_scope(name)
+
+
+def kernel_scope(op: str, which: str):
+    """Stable trace-viewer name for one dispatched kernel op instance:
+    ``repro.kernels.<op>[<backend>]``, so backend A/Bs line up by name."""
+    return jax.named_scope(f"repro.kernels.{op}[{which}]")
+
+
+@dataclasses.dataclass
+class SpanRecord:
+    """One finished span, as emitted to a sink (the metrics stream)."""
+    name: str
+    start: float          # perf_counter seconds (monotonic, process epoch)
+    dur: float            # seconds
+    depth: int            # nesting depth at entry (0 = top level)
+    parent: Optional[str]  # enclosing span's name, None at top level
+
+
+# Host-side span stack. The training/dryrun loops are single-threaded
+# drivers, so a module-level stack is sufficient (and keeps Span allocation
+# trivial); concurrent host threads would each want their own Tracer, which
+# nothing here needs yet.
+_ACTIVE: list["Span"] = []
+
+
+class Span:
+    """Host-side phase timer, nestable, with a profiler annotation.
+
+    ``sink`` (a ``SpanRecord -> None`` callable, e.g.
+    ``MetricsLogger._span_sink``) receives the record at exit; without a
+    sink the span still times itself (``.dur``) for ad-hoc use. The
+    ``TraceAnnotation`` makes the host phase visible in ``--profile-dir``
+    captures; pass ``annotate=False`` to skip it (spans timed inside other
+    profiler tooling).
+    """
+
+    def __init__(self, name: str,
+                 sink: Optional[Callable[[SpanRecord], None]] = None,
+                 annotate: bool = True):
+        self.name = name
+        self.sink = sink
+        self.start = 0.0
+        self.dur = 0.0
+        self.depth = 0
+        self.parent: Optional[str] = None
+        self._ann = (jax.profiler.TraceAnnotation(name) if annotate
+                     else None)
+
+    def __enter__(self) -> "Span":
+        self.depth = len(_ACTIVE)
+        self.parent = _ACTIVE[-1].name if _ACTIVE else None
+        _ACTIVE.append(self)
+        if self._ann is not None:
+            self._ann.__enter__()
+        self.start = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.dur = time.perf_counter() - self.start
+        if self._ann is not None:
+            self._ann.__exit__(exc_type, exc, tb)
+        _ACTIVE.pop()
+        if self.sink is not None:
+            self.sink(SpanRecord(self.name, self.start, self.dur,
+                                 self.depth, self.parent))
+        return False
+
+
+class ProfileCapture:
+    """Opt-in ``jax.profiler`` trace of the first N steps (--profile-dir).
+
+    The loop calls :meth:`step_start` at the top of every iteration and
+    :meth:`step_end` after the step's outputs are blocked on; the capture
+    spans steps 1..N and stops itself. Inert when ``trace_dir`` is None,
+    so call sites need no conditionals. :meth:`stop` is the end-of-run
+    safety net for runs shorter than the window.
+    """
+
+    def __init__(self, trace_dir: Optional[str], steps: int = 3):
+        self.trace_dir = trace_dir
+        self.steps = max(1, steps)
+        self._seen = 0
+        self._active = False
+        self.done = trace_dir is None
+
+    def step_start(self, t: int) -> None:
+        if self.done or self._active:
+            return
+        jax.profiler.start_trace(self.trace_dir)
+        self._active = True
+
+    def step_end(self, t: int) -> None:
+        if not self._active:
+            return
+        self._seen += 1
+        if self._seen >= self.steps:
+            self.stop()
+
+    def stop(self) -> None:
+        if self._active:
+            jax.profiler.stop_trace()
+            self._active = False
+        self.done = True
