@@ -227,6 +227,74 @@ def _bench_damped_inverse(quick: bool):
     return out
 
 
+def _bench_serve(quick: bool):
+    """Serving decode A/B on the reduced llama: the seed's dense-cache
+    decode step vs the flash-decode step over the fp8 ring cache.
+
+    Baseline per the `_bench_attn_bwd` precedent (the retired scheme,
+    rebuilt locally): the seed decoded through the FULL ``max_len``-padded
+    dense cache every step — masked, but full FLOPs/bandwidth. This PR's
+    clamp trims the live path, so the unclamped walk is reconstructed with
+    a ``window=0`` config (identical compute shapes to the seed's masked
+    windowed walk — the window only changes the mask, not the contraction).
+    Flash arm: ring cache of capacity ``window`` + ``swa_decode``. Both
+    arms time the jitted ``decode_step`` on the ref backend (repo
+    convention: jnp is the reported timing column on CPU; interpret-mode
+    Pallas wall time is Python emulation). Returns {name: rec}."""
+    from repro.configs import get_config
+    from repro.models.transformer import DecoderLM
+    from repro.serve import ServeConfig, cache_bytes
+
+    b, plen = 8, 16
+    max_len, win = (2048, 128) if quick else (4096, 256)
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(0, 256, (b, plen)), jnp.int32)
+
+    def build(window, serve):
+        cfg = get_config("llama3_2_1b").reduced(
+            head_dim=32, d_ff=128, vocab=256, sliding_window=window)
+        cfg = dataclasses.replace(cfg, backend="ref")
+        model = DecoderLM(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        prefill = jax.jit(functools.partial(model.prefill, max_len=max_len,
+                                            serve=serve))
+        logits, cache = prefill(params, {"tokens": prompts})
+        tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+        step = jax.jit(functools.partial(model.decode_step, serve=serve))
+        return model, params, cache, tok, step
+
+    _, params, cache, tok, step = build(0, None)
+    t_dense = time_fn(step, params, cache, tok, warmup=1, iters=3)
+
+    serve = ServeConfig(kv_cache="ring", kv_dtype="fp8_e4m3", backend="ref")
+    model, params, cache, tok, step = build(win, serve)
+    t_flash = time_fn(step, params, cache, tok, warmup=1, iters=3)
+
+    fp8_b = cache_bytes(cache)
+    f32_b = cache_bytes(model.init_cache(
+        b, max_len, serve=ServeConfig(kv_cache="ring", kv_dtype="f32")))
+    dense_b = cache_bytes(model.init_cache(b, max_len))
+    return {
+        "serve.decode_dense": {"us": t_dense, "max_len": max_len,
+                               "batch": b},
+        "serve.decode_flash": {"us": t_flash, "window": win, "batch": b},
+        # acceptance gauge: flash decode <= 0.5x the dense walk at
+        # window <= max_len/4 (here max_len/16)
+        "serve.decode_flash_over_dense": {
+            "us_ratio": t_flash / t_dense,
+            "max_len": max_len, "window": win,
+        },
+        # acceptance gauge: fp8 ring payload <= 0.3x the f32 ring cache at
+        # the SAME capacity (isolates the codec from the window sizing;
+        # f32_dense_bytes documents the combined ring+fp8 saving)
+        "serve.kv_fp8_over_f32": {
+            "ratio": fp8_b / f32_b,
+            "fp8_ring_bytes": fp8_b, "f32_ring_bytes": f32_b,
+            "f32_dense_bytes": dense_b,
+        },
+    }
+
+
 def _bench_in_subprocess(flag: str, local_fn, quick: bool, what: str):
     """Run a multi-device A/B body in a SUBPROCESS with 8 virtual CPU
     devices so the collectives are real multi-device programs — setting the
@@ -584,6 +652,19 @@ def run(quick: bool = False):
     }
     out.append(row("attn_bwd.fused_over_recompute", 0.0,
                    f"flops_ratio={ratio:.3f}"))
+
+    # ---- serving decode A/B: dense-cache walk vs ring flash decode ----
+    sv = _bench_serve(quick)
+    for name, rec in sv.items():
+        LAST_RESULTS[name] = rec
+        if "us_ratio" in rec:
+            extra = f"us_ratio={rec['us_ratio']:.3f}"
+        elif "ratio" in rec:
+            extra = f"ratio={rec['ratio']:.3f}"
+        else:
+            extra = (f"max_len={rec['max_len']}" if "max_len" in rec
+                     else f"window={rec['window']}")
+        out.append(row(name, rec.get("us", 0.0), extra))
 
     # ---- end-to-end dispatch A/B: full train_step per backend ----
     for backend in ("ref", "pallas"):

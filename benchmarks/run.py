@@ -8,10 +8,12 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   stale_reduction  Table 2 reduction % + Fig. 6 byte series
   scaling          Fig. 5 time/step vs #devices (measured + comm model)
   kernels_bench    Pallas kernel contracts + ref-vs-pallas train_step A/B
+  serve_bench      continuous-batching decode throughput vs concurrency
 
 The kernels module additionally writes ``BENCH_kernels.json`` (repo root)
 with both backends' step timings so later PRs have a perf trajectory to
-compare against.
+compare against; serve_bench rows measured in the same invocation are
+merged into it.
 """
 
 from __future__ import annotations
@@ -27,9 +29,15 @@ import jax
 
 
 def _emit_kernels_json(quick: bool) -> None:
-    from benchmarks import kernels_bench
+    from benchmarks import kernels_bench, serve_bench
     if not kernels_bench.LAST_RESULTS:
         return
+    results = dict(kernels_bench.LAST_RESULTS)
+    # serve_bench (when it ran in this invocation) shares the snapshot so
+    # the bench_compare gate sees serve.* rows; the private _curve blob
+    # stays out — it goes to the standalone serve_curve.json artifact
+    results.update({k: v for k, v in serve_bench.LAST_RESULTS.items()
+                    if not k.startswith("_")})
     rec = {
         "quick": quick,
         "jax_backend": jax.default_backend(),
@@ -38,7 +46,7 @@ def _emit_kernels_json(quick: bool) -> None:
         "note": ("Pallas kernels run interpret=True on CPU: "
                  "train_step.pallas timings here measure the dispatch "
                  "plumbing, not TPU kernel speed"),
-        "results": kernels_bench.LAST_RESULTS,
+        "results": results,
     }
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_kernels.json")
@@ -54,9 +62,10 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (convergence, fisher_ablation, kernels_bench,
-                            scaling, stale_reduction)
+                            scaling, serve_bench, stale_reduction)
     modules = {
         "kernels_bench": kernels_bench,
+        "serve_bench": serve_bench,
         "fisher_ablation": fisher_ablation,
         "stale_reduction": stale_reduction,
         "scaling": scaling,
@@ -76,13 +85,15 @@ def main() -> None:
             print(f"{name}.ERROR,0.0,{type(e).__name__}", flush=True)
             traceback.print_exc(file=sys.stderr)
             continue
-        if name == "kernels_bench":
-            try:
-                _emit_kernels_json(args.quick)
-            except OSError as e:
-                # read-only checkout etc.: the benchmark itself succeeded
-                print(f"# BENCH_kernels.json not written: {e}",
-                      file=sys.stderr)
+    # after the loop so a same-invocation serve_bench run lands in the
+    # snapshot too (results merge in _emit_kernels_json)
+    if "kernels_bench" in modules and "kernels_bench" not in failed:
+        try:
+            _emit_kernels_json(args.quick)
+        except OSError as e:
+            # read-only checkout etc.: the benchmark itself succeeded
+            print(f"# BENCH_kernels.json not written: {e}",
+                  file=sys.stderr)
     if failed:
         sys.exit(1)
 

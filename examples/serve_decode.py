@@ -2,8 +2,12 @@
 against the KV cache (the serve_step lowered by the decode dry-run shapes).
 
     PYTHONPATH=src python examples/serve_decode.py [--arch llama3_2_1b]
+    # flash-decode over the fp8 ring cache (window must be > 0):
+    PYTHONPATH=src python examples/serve_decode.py --serve ring --window 16
 """
 import argparse
+import dataclasses
+import functools
 import time
 
 import jax
@@ -12,6 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.transformer import DecoderLM
+from repro.serve import ServeConfig, cache_bytes
 
 
 def main():
@@ -20,9 +25,25 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding window override (0 = full causal)")
+    ap.add_argument("--serve", choices=["off", "ring", "dense"], default="off",
+                    help="serving cache: ring = windowed ring buffer + "
+                         "swa_decode flash kernel, dense = dense-f32 "
+                         "fallback, off = the seed's dense decode path")
+    ap.add_argument("--kv-dtype", default="fp8_e4m3",
+                    choices=["f32", "fp8_e4m3", "fp8_e5m2"],
+                    help="ring-cache payload storage (ignored for --serve "
+                         "off/dense)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if args.window is not None:
+        cfg = dataclasses.replace(cfg, sliding_window=args.window)
+    serve = None
+    if args.serve != "off":
+        dtype = args.kv_dtype if args.serve == "ring" else "f32"
+        serve = ServeConfig(kv_cache=args.serve, kv_dtype=dtype)
     model = DecoderLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.RandomState(0)
@@ -30,16 +51,25 @@ def main():
         rng.randint(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
     max_len = args.prompt_len + args.gen
+    prefill = jax.jit(functools.partial(model.prefill, max_len=max_len,
+                                        serve=serve))
     t0 = time.time()
-    logits, cache = jax.jit(
-        lambda p, b: model.prefill(p, b, max_len))(params, {"tokens": prompts})
-    jax.block_until_ready(logits)
+    logits, cache = prefill(params, {"tokens": prompts})
+    jax.block_until_ready((logits, cache))
     t_prefill = time.time() - t0
+    # host-syncing introspection stays OUTSIDE the timing window: int() on a
+    # device array blocks on it, which would bill the sync to prefill
+    clen = int(cache["len"].max()) if serve is not None else int(cache["len"])
     print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill:.2f}s -> cache len {int(cache['len'])}")
+          f"{t_prefill:.2f}s -> cache len {clen}, "
+          f"kv cache {cache_bytes(cache)} bytes")
 
-    decode = jax.jit(model.decode_step)
+    decode = jax.jit(functools.partial(model.decode_step, serve=serve))
     tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+    # warm up: the first call pays jit compilation; run it on a throwaway
+    # result (decode is functional, the real cache is untouched) so the
+    # timed loop below measures steady-state steps only
+    jax.block_until_ready(decode(params, cache, tok))
     out = [tok]
     t0 = time.time()
     for _ in range(args.gen - 1):

@@ -465,6 +465,42 @@ def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# swa_decode: single-query flash decode over a KV cache (the serving hot
+# path). q (N, G, hd) in the GQA kernel layout (N = B * KV heads, G query
+# heads per KV head, same grouping as the training ops); k/v (N, C, hd) are
+# the CACHE contents — ``window > 0`` means C == window and the cache is a
+# ring buffer (token at position p lives in slot p % window), ``window ==
+# 0`` means a dense cache attended full-causally. pos (N,) i32 holds each
+# sequence's absolute query position (== tokens already cached; the query's
+# own k/v must be written before the call). k_scale/v_scale (N, C) f32 are
+# optional per-row dequant scales for fp8 payloads — the pallas path
+# dequantizes ON READ in VMEM, so the f32 cache never exists in HBM.
+# ---------------------------------------------------------------------------
+
+def _swa_decode_ref(q, k, v, pos, window: int, k_scale, v_scale):
+    from repro.kernels import ref
+    return ref.swa_decode_ref(q, k, v, pos, window=window,
+                              k_scale=k_scale, v_scale=v_scale)
+
+
+def _swa_decode_pallas(q, k, v, pos, window: int, k_scale, v_scale):
+    from repro.kernels import ops
+    return ops.swa_decode(q, k, v, pos, window=window,
+                          k_scale=k_scale, v_scale=v_scale)
+
+
+def swa_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array, *,
+               window: int = 0, k_scale: jax.Array | None = None,
+               v_scale: jax.Array | None = None,
+               backend: str | None = None) -> jax.Array:
+    """Single-query decode attention; returns (N, G, hd) f32."""
+    # auto gates on cache capacity (the swept dim) — like swa_attention the
+    # win is bandwidth, not MXU fill, and hd=64 would never pass the gate
+    which = resolve(backend, k.shape[-2])
+    return _call("swa_decode", which, q, k, v, pos, window, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
 # swa_attention_fwd_res / swa_attention_bwd: the training path.
 #
 # GQA layout contract: q / o / do are (BKV, G, S, hd) — query heads grouped
@@ -544,6 +580,8 @@ register("ring_hop_unpack", "ref", _ring_hop_unpack_ref)
 register("ring_hop_unpack", "pallas", _ring_hop_unpack_pallas)
 register("swa_attention", "ref", _swa_ref)
 register("swa_attention", "pallas", _swa_pallas)
+register("swa_decode", "ref", _swa_decode_ref)
+register("swa_decode", "pallas", _swa_decode_pallas)
 register("swa_attention_fwd_res", "ref", _swa_fwd_res_ref)
 register("swa_attention_fwd_res", "pallas", _swa_fwd_res_pallas)
 register("swa_attention_bwd", "ref", _swa_bwd_ref)

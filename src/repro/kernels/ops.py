@@ -300,6 +300,47 @@ def fp8_dequant_rows(payload: jax.Array, scale: jax.Array, *, bg: int = 8,
     return out[:g, :t].reshape(lead + (t,))
 
 
+@functools.partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def swa_decode(q: jax.Array, k: jax.Array, v: jax.Array, pos: jax.Array,
+               *, window: int = 0, k_scale: jax.Array | None = None,
+               v_scale: jax.Array | None = None, bk: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """Single-query flash decode over a KV cache (serving hot path).
+
+    q (N, G, hd) — one query token per sequence in the GQA kernel layout
+    (N = B * KV heads, G query heads per KV head); k/v (N, C, hd) cache
+    payload (f32/bf16 dense or fp8 with ``k_scale``/``v_scale`` (N, C) f32
+    per-row dequant scales); pos (N,) i32 absolute query positions.
+    ``window > 0`` means C == window and the cache is a RING buffer (token
+    at position p lives in slot p % window); ``window == 0`` attends the
+    dense cache full-causally. Returns (N, G, hd) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n, g, hd = q.shape
+    c = k.shape[1]
+    if window and c != window:
+        raise ValueError(f"ring decode needs k.shape[1] == window; got "
+                         f"{c} vs {window}")
+    if k_scale is None:
+        k_scale = jnp.ones((n, c), jnp.float32)
+    if v_scale is None:
+        v_scale = jnp.ones((n, c), jnp.float32)
+    bk_ = min(bk, -(-c // 128) * 128)
+    cp = -(-c // bk_) * bk_
+    if cp != c:
+        # zero-fill padding: masked off in-kernel via slot < C
+        k = jnp.pad(k, ((0, 0), (0, cp - c), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, cp - c), (0, 0)))
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, cp - c)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, cp - c)))
+    # k/v enter the kernel in their STORED dtype (fp8 payloads included) —
+    # the dequant (cast + scale multiply) happens on read in VMEM, so the
+    # f32 cache never exists in HBM
+    return _swa.swa_flash_decode(
+        q, k, v, k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+        pos.astype(jnp.int32).reshape(n, 1), window=window, cache_len=c,
+        bk=bk_, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "bq", "bk",
                                              "interpret"))
 def swa_attention_fwd_res(q: jax.Array, k: jax.Array, v: jax.Array, *,

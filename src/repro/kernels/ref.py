@@ -35,6 +35,65 @@ def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def swa_decode_slot_positions(pos: jax.Array, capacity: int) -> jax.Array:
+    """Absolute position held by each ring slot after the token at ``pos``
+    was written (slot = position % capacity).
+
+    pos: (N,) i32 current decode position(s); returns (N, capacity) i32 where
+    entry s is the position of the token resident in slot s: the most recent
+    position p <= pos with p % capacity == s. Slots not yet written (pos + 1
+    < capacity) come out NEGATIVE — the caller masks on ``>= 0``. This is the
+    single source of the ring<->position contract shared by the jnp oracle
+    and the Pallas decode kernel's in-kernel index math.
+    """
+    sl = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    r = (pos[:, None] % capacity).astype(jnp.int32)
+    base = pos[:, None].astype(jnp.int32) - r
+    return jnp.where(sl <= r, base + sl, base - capacity + sl)
+
+
+def swa_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   pos: jax.Array, *, window: int = 0,
+                   k_scale: jax.Array = None, v_scale: jax.Array = None
+                   ) -> jax.Array:
+    """Single-query decode attention oracle (materialized scores).
+
+    q: (N, G, hd) — one query token per sequence, G query heads per KV head
+    (GQA layout, N = B * KV). k/v: (N, C, hd) — the KV cache contents:
+    ``window > 0`` means C == window and k/v are a RING buffer (token at
+    position p lives in slot p % window); ``window == 0`` means a dense
+    cache attended full-causally (slot s holds position s). pos: (N,) i32
+    absolute position of the query (== number of previously cached tokens);
+    the query's own k/v must already be written. k_scale/v_scale: (N, C)
+    per-row dequant scales for fp8 payloads (None = dense, no dequant).
+    Returns (N, G, hd) in q.dtype. Visibility contract (pinned by
+    tests/test_serve_decode.py): key position j is visible iff
+    ``0 <= j <= pos`` and, when window > 0, ``j > pos - window`` — i.e.
+    exactly ``min(pos + 1, window)`` keys.
+    """
+    n, c, hd = k.shape
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None].astype(jnp.float32)
+    if v_scale is not None:
+        vf = vf * v_scale[..., None].astype(jnp.float32)
+    s = jnp.einsum("ngd,ncd->ngc", q.astype(jnp.float32) * hd ** -0.5, kf)
+    posb = pos[:, None].astype(jnp.int32)
+    if window:
+        if c != window:
+            raise ValueError(f"ring decode needs k.shape[1] == window; got "
+                             f"{c} vs {window}")
+        p = swa_decode_slot_positions(pos, c)
+        valid = (p >= 0) & (p <= posb) & (p > posb - window)
+    else:
+        p = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[None, :], (n, c))
+        valid = p <= posb
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("ngc,ncd->ngd", w, vf).astype(q.dtype)
+
+
 def swa_attention_fwd_res_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                               window: int = 0):
     """GQA training forward with residuals, materialized scores.

@@ -133,6 +133,117 @@ def swa_flash(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int = 0,
 
 
 # ---------------------------------------------------------------------------
+# serving path: single-query flash decode over a (ring-buffer) KV cache
+# ---------------------------------------------------------------------------
+
+def _swa_decode_kernel(q_ref, k_ref, ks_ref, v_ref, vs_ref, pos_ref, o_ref,
+                       m_ref, d_ref, acc_ref, *,
+                       bk: int, window: int, cache_len: int, n_k: int,
+                       scale: float):
+    """One grid step: q (1, G, hd) resident, sweep KV block j of the cache.
+
+    No S x S tile walk — the grid is (N, C/bk) over KV blocks only; the
+    single query row rides along in VMEM for the whole sweep, with the
+    online-softmax (m, d, acc) carried in scratch exactly like the training
+    forward. fp8 caches dequantize ON READ: k/v arrive as the stored payload
+    and ks/vs carry the per-row scales (ones for dense caches), so the f32
+    KV never exists in HBM. Ring masking derives each slot's absolute
+    position from ``pos`` (slot = position % window) in-kernel; ``window ==
+    0`` is the dense full-causal layout (slot s holds position s) and skips
+    blocks past ``pos`` entirely.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+    # dense mode: blocks whose first slot is past the query position hold
+    # nothing visible — skip the compute (the ring mode visits every block:
+    # capacity == window means every resident slot is in the band)
+    run = (j * bk <= pos) if window == 0 else (j >= 0)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale          # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        sl = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        if window:
+            r = pos % window
+            base = pos - r
+            p = jnp.where(sl <= r, base + sl, base - window + sl)
+            valid = (p >= 0) & (p <= pos) & (p > pos - window)
+            valid &= sl < window                  # lane padding past C
+        else:
+            p = sl
+            valid = (p <= pos) & (sl < cache_len)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                               # (G,)
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        corr = jnp.exp(m_prev - m_new)
+        pr = jnp.exp(s - m_new[:, None])
+        d_ref[...] = d_ref[...] * corr + pr.sum(-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            pr, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(d_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)[None]
+
+
+def swa_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_scale: jax.Array, v_scale: jax.Array,
+                     pos: jax.Array, *, window: int = 0,
+                     cache_len: int = 0, bk: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """Single-query GQA flash decode. q (N, G, hd); k/v (N, Cp, hd) cache
+    payload (fp8 or dense dtype, Cp = lane-padded capacity); k_scale/v_scale
+    (N, Cp) f32 per-row dequant scales (ones for dense); pos (N, 1) i32.
+    ``window`` > 0 = ring layout of capacity ``window``; 0 = dense cache of
+    ``cache_len`` valid slots. Returns (N, G, hd) f32."""
+    n, g, hd = q.shape
+    cp = k.shape[1]
+    bk_ = min(bk, cp)
+    n_k = pl.cdiv(cp, bk_)
+    grid = (n, n_k)
+    scale = hd ** -0.5
+
+    kv_spec = pl.BlockSpec((1, bk_, hd), lambda b, j: (b, j, 0))
+    sc_spec = pl.BlockSpec((1, bk_), lambda b, j: (b, j))
+    return pl.pallas_call(
+        functools.partial(_swa_decode_kernel, bk=bk_, window=window,
+                          cache_len=cache_len, n_k=n_k, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+            kv_spec, sc_spec, kv_spec, sc_spec,
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),          # running max
+            pltpu.VMEM((g,), jnp.float32),          # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),       # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, k_scale, v, v_scale, pos)
+
+
+# ---------------------------------------------------------------------------
 # training path: GQA-grouped forward with logsumexp residual + fused backward
 # ---------------------------------------------------------------------------
 

@@ -117,6 +117,22 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``backend``: kernel backend knob ("ref" | "pallas" | "auto"); eligible
     calls resolving to "pallas" run the Pallas flash kernel, everything else
     takes the chunked pure-JAX path below.
+
+    Window/offset contract (shared by train, decode, and the ``swa_decode``
+    serving kernel; pinned by tests/test_serve_decode.py):
+
+    * ``window == 0`` ALWAYS means full causal — never "window of zero
+      keys". A ``window=None`` default exists only at the model layer
+      (``DecoderLM._attn`` / ``ServeConfig.window``), where None means
+      "inherit the config" and 0 still means full causal.
+    * a decode query at ``q_offset == cache_len`` sees exactly
+      ``min(cache_len + 1, window)`` keys (its own k/v included) — at the
+      boundary ``cache_len + 1 == window`` the whole window is visible and
+      the NEXT step is the first to drop a key. In the ring-buffer cache
+      (capacity C == window) that first dropped key is the one in slot
+      ``(cache_len + 1) % C`` — the slot the next token overwrites, so
+      eviction and masking agree by construction
+      (``repro.kernels.ref.swa_decode_slot_positions``).
     """
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]

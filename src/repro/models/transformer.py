@@ -212,7 +212,7 @@ class DecoderLM:
         return rmsnorm(x, p["gamma"], stats)
 
     def _attn(self, x, p, fs, *, positions, cache_kv=None, cache_len=None,
-              window=None):
+              window=None, serve=None):
         cfg = self.cfg
         b, s, d = x.shape
         h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -231,17 +231,37 @@ class DecoderLM:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
         win = cfg.sliding_window if window is None else window
-        if cache_kv is not None:
-            ck, cv = cache_kv                     # (B, M, KV, hd)
+        if cache_kv is not None and serve is not None:
+            win = serve.resolved_window(cfg)
+            out, new_cache = self._attn_serve(q, k, v, cache_kv, cache_len,
+                                              serve, win)
+        elif cache_kv is not None:
+            ck, cv = cache_kv["k"], cache_kv["v"]     # (B, M, KV, hd)
             ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
                                                      cache_len, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
                                                      cache_len, axis=1)
-            out = attn_lib.attention(q, ck, cv, causal=True, window=win,
-                                     q_offset=cache_len,
-                                     kv_len=cache_len + s,
-                                     backend=cfg.backend)
-            new_cache = (ck, cv)
+            m = ck.shape[1]
+            if s == 1 and win and win < m:
+                # decode-span clamp: a windowed query sees at most `win`
+                # keys, so slice that span out of the max_len-padded cache
+                # instead of streaming (and masking) all m slots. start is
+                # clamped so the slice stays in bounds before the window
+                # fills; q_offset/kv_len are re-based into the slice, which
+                # keeps the mask identical to the unclamped call.
+                start = jnp.clip(cache_len + 1 - win, 0, m - win)
+                cks = jax.lax.dynamic_slice_in_dim(ck, start, win, axis=1)
+                cvs = jax.lax.dynamic_slice_in_dim(cv, start, win, axis=1)
+                out = attn_lib.attention(q, cks, cvs, causal=True, window=win,
+                                         q_offset=cache_len - start,
+                                         kv_len=cache_len + 1 - start,
+                                         backend=cfg.backend)
+            else:
+                out = attn_lib.attention(q, ck, cv, causal=True, window=win,
+                                         q_offset=cache_len,
+                                         kv_len=cache_len + s,
+                                         backend=cfg.backend)
+            new_cache = {"k": ck, "v": cv}
         else:
             # k/v stay at kv heads (unexpanded): the kernel-eligible route
             # keeps them per-KV-head all the way into the Pallas kernels
@@ -254,11 +274,81 @@ class DecoderLM:
                                sp["attn_wo"])
         return o, new_cache
 
+    def _attn_serve(self, q, k, v, cache_kv, cache_len, serve, win):
+        """Serving cache paths (``repro.serve``): ring buffer sized to the
+        window (fp8 or f32 payload) or the dense-f32 ``window=0`` fallback,
+        both decoding through the single-query ``swa_decode`` flash op.
+
+        q (B, S, H, hd); k/v (B, S, KV, hd); cache payload (B, C, KV, hd)
+        [+ (B, C, KV) scales for fp8]; cache_len (B,) i32 per-sequence
+        positions. S > 1 is prefill (full windowed attention over the
+        prompt, then pack the last C tokens into their ring slots); S == 1
+        is one decode step (write the token's k/v into slot ``pos % C``,
+        then flash-decode over the cache). Returns (out, new_cache)."""
+        from repro.kernels import dispatch
+        from repro.serve import cache as cache_lib
+        cfg = self.cfg
+        b, s, h, hd = q.shape
+        kv = k.shape[2]
+        ck, cv = cache_kv["k"], cache_kv["v"]
+        cap = ck.shape[1]
+        ring = serve.is_ring(cfg)
+        fmt = serve.quant_fmt if ring else None
+        backend = serve.backend or cfg.backend
+        # the kernel's ring contract needs C == window; the dense fallback
+        # (full causal) passes window=0 and masks on position <= pos
+        kern_win = cap if ring else 0
+
+        if s > 1:
+            out = attn_lib.attention(q, k, v, causal=True, window=win,
+                                     backend=backend)
+            # pack the cache tail: slot s' receives the latest prompt
+            # position p <= S-1 with p % C == s' (negative = unwritten)
+            idx = cache_lib.prefill_gather_index(s, cap)
+            live = jnp.asarray(idx >= 0)[None, :, None, None]
+            sel = jnp.asarray(idx.clip(min=0), jnp.int32)
+            gk = jnp.where(live, k[:, sel], 0.0)
+            gv = jnp.where(live, v[:, sel], 0.0)
+            kp, ks = cache_lib.encode_rows(gk, fmt, serve.scale_mode)
+            vp, vs = cache_lib.encode_rows(gv, fmt, serve.scale_mode)
+            new_cache = {"k": kp.astype(ck.dtype), "v": vp.astype(cv.dtype)}
+            if ks is not None:
+                new_cache["k_scale"] = ks
+                new_cache["v_scale"] = vs
+            return out, new_cache
+
+        # decode: write this token, then flash-decode over the cache
+        kp, ks = cache_lib.encode_rows(k, fmt, serve.scale_mode)
+        vp, vs = cache_lib.encode_rows(v, fmt, serve.scale_mode)
+        slot = (cache_len % cap).astype(jnp.int32)
+        ck = cache_lib.write_slot(ck, kp.astype(ck.dtype), slot)
+        cv = cache_lib.write_slot(cv, vp.astype(cv.dtype), slot)
+        new_cache = {"k": ck, "v": cv}
+        ksg = vsg = None
+        if ks is not None:
+            cks = cache_lib.write_slot(cache_kv["k_scale"], ks, slot)
+            cvs = cache_lib.write_slot(cache_kv["v_scale"], vs, slot)
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
+            ksg = cks.transpose(0, 2, 1).reshape(b * kv, cap)
+            vsg = cvs.transpose(0, 2, 1).reshape(b * kv, cap)
+        # GQA kernel layout (query head c*G + r under KV head c, same
+        # grouping as models.attention._to_kernel_layout)
+        qg = q[:, 0].reshape(b, kv, h // kv, hd).reshape(b * kv, h // kv, hd)
+        kg = ck.transpose(0, 2, 1, 3).reshape(b * kv, cap, hd)
+        vg = cv.transpose(0, 2, 1, 3).reshape(b * kv, cap, hd)
+        pos = jnp.repeat(cache_len.astype(jnp.int32), kv)
+        og = dispatch.swa_decode(qg, kg, vg, pos, window=kern_win,
+                                 k_scale=ksg, v_scale=vsg, backend=backend)
+        out = og.reshape(b, h, hd)[:, None].astype(q.dtype)
+        return out, new_cache
+
     # ------------------------------------------------------------------
     # block (shared by train forward and decode, cache optional)
     # ------------------------------------------------------------------
 
-    def _block(self, x, p, fs, *, positions, cache=None, cache_len=None):
+    def _block(self, x, p, fs, *, positions, cache=None, cache_len=None,
+               serve=None):
         """Returns (y, aux_loss, new_cache)."""
         cfg = self.cfg
         aux = jnp.zeros((), jnp.float32)
@@ -296,10 +386,11 @@ class DecoderLM:
             return x, aux, new_cache
 
         h1 = self._norm(x, p["ln1"], "ln1", fs)
+        kv_sub = (_kv_cache_sub(cache) if cache is not None else None)
         if cfg.block_type == "hymba":
             attn_out, kvc = self._attn(h1, p["attn"], fs, positions=positions,
-                                       cache_kv=(cache["k"], cache["v"]) if cache else None,
-                                       cache_len=cache_len)
+                                       cache_kv=kv_sub, cache_len=cache_len,
+                                       serve=serve)
             ssm_kwargs = {}
             if cache is not None:
                 ssm_kwargs = dict(init_state=cache["ssm_h"],
@@ -312,16 +403,15 @@ class DecoderLM:
                                          **ssm_kwargs)
             if cache is not None:
                 ssm_out, (new_h, new_conv) = ssm_out
-                new_cache.update(ssm_h=new_h, conv=new_conv,
-                                 k=kvc[0], v=kvc[1])
+                new_cache.update(ssm_h=new_h, conv=new_conv, **kvc)
             # parallel heads: average the two branch outputs (Hymba-style)
             x = x + 0.5 * (attn_out + ssm_out)
         else:
             attn_out, kvc = self._attn(h1, p["attn"], fs, positions=positions,
-                                       cache_kv=(cache["k"], cache["v"]) if cache else None,
-                                       cache_len=cache_len)
+                                       cache_kv=kv_sub, cache_len=cache_len,
+                                       serve=serve)
             if cache is not None:
-                new_cache.update(k=kvc[0], v=kvc[1])
+                new_cache.update(kvc)
             x = x + attn_out
 
         h2 = self._norm(x, p["ln2"], "ln2", fs)
@@ -419,10 +509,12 @@ class DecoderLM:
     # ------------------------------------------------------------------
 
     def init_cache(self, batch_size: int, max_len: int,
-                   dtype=None) -> dict:
+                   dtype=None, *, serve=None) -> dict:
         cfg = self.cfg
         dtype = dtype or cfg.dtype
         L, b = cfg.n_layers, batch_size
+        if serve is not None:
+            return self._init_serve_cache(b, max_len, serve)
         c: dict = {"len": jnp.zeros((), jnp.int32)}
         if cfg.block_type in ("dense", "moe", "hymba"):
             kvshape = (L, b, max_len, cfg.n_kv_heads, cfg.hd)
@@ -439,20 +531,64 @@ class DecoderLM:
             c["wkv"] = jnp.zeros((L, b, h, cfg.hd, cfg.hd), jnp.float32)
         return c
 
-    def decode_step(self, params, cache, tokens: jax.Array):
-        """tokens: (B,) -> (logits (B, V), new_cache). One decode position."""
+    def _init_serve_cache(self, b: int, max_len: int, serve) -> dict:
+        """Serving cache (``repro.serve``): ring buffer sized to the window
+        (fp8 payload + per-row f32 scales, or f32), or the dense-f32
+        fallback when the resolved window is 0 (full causal — nothing is
+        evictable, so a ring cannot be smaller than max_len anyway).
+        ``len`` is a per-sequence (B,) position vector so the continuous
+        batcher can hold sequences at different depths in one cache."""
+        from repro.serve import cache as cache_lib
+        cfg = self.cfg
+        if cfg.block_type not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"serve caches cover attention-only blocks (dense/moe); "
+                f"got block_type={cfg.block_type!r}")
+        win = serve.resolved_window(cfg)
+        ring = serve.is_ring(cfg)
+        if not ring and win:
+            raise ValueError(
+                "serve kv_cache='dense' supports window == 0 only (a "
+                "windowed dense decode belongs to the legacy serve=None "
+                "path or the ring cache)")
+        cap = cache_lib.ring_capacity(win, max_len) if ring else max_len
+        L, kvh, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+        c: dict = {"len": jnp.zeros((b,), jnp.int32)}
+        fmt = serve.quant_fmt if ring else None
+        if fmt is None:
+            c["k"] = jnp.zeros((L, b, cap, kvh, hd), jnp.float32)
+            c["v"] = jnp.zeros((L, b, cap, kvh, hd), jnp.float32)
+        else:
+            from repro.quant import quant
+            pdt = quant.FORMATS[fmt]
+            c["k"] = jnp.zeros((L, b, cap, kvh, hd), pdt)
+            c["v"] = jnp.zeros((L, b, cap, kvh, hd), pdt)
+            c["k_scale"] = jnp.zeros((L, b, cap, kvh), jnp.float32)
+            c["v_scale"] = jnp.zeros((L, b, cap, kvh), jnp.float32)
+        return c
+
+    def decode_step(self, params, cache, tokens: jax.Array, *, serve=None):
+        """tokens: (B,) -> (logits (B, V), new_cache). One decode position.
+
+        With ``serve`` (a :class:`repro.serve.ServeConfig`) the cache is the
+        serving layout from :meth:`init_cache` — per-sequence ``len`` (B,),
+        ring/fp8 payloads — and attention runs the ``swa_decode`` flash op;
+        without it, the seed's dense-cache path (scalar ``len``)."""
         cfg = self.cfg
         h = tagging.embed_site(tokens[:, None], params["embed"]["table"],
                                None, self.embed_spec)
         pos = cache["len"]
-        positions = pos + jnp.arange(1)
+        if serve is not None:
+            positions = pos[:, None]               # (B, 1) per-seq rope
+        else:
+            positions = pos + jnp.arange(1)
 
         layer_cache = {k: v for k, v in cache.items() if k != "len"}
 
         def body(x, xs):
             p, c = xs
             y, _, new_c = self._block(x, p, None, positions=positions,
-                                      cache=c, cache_len=pos)
+                                      cache=c, cache_len=pos, serve=serve)
             return y, new_c
 
         h, new_layer_cache = jax.lax.scan(body, h,
@@ -464,20 +600,22 @@ class DecoderLM:
         new_cache["len"] = pos + 1
         return logits[:, 0, :], new_cache
 
-    def prefill(self, params, batch, max_len: int):
+    def prefill(self, params, batch, max_len: int, *, serve=None):
         """Forward + cache fill (used by the serving example)."""
         cfg = self.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
-        cache = self.init_cache(b, max_len)
+        cache = self.init_cache(b, max_len, serve=serve)
         h, positions, n_front = self._embed_inputs(params, batch, None)
 
         layer_cache = {k: v for k, v in cache.items() if k != "len"}
+        len0 = (jnp.zeros((b,), jnp.int32) if serve is not None
+                else jnp.zeros((), jnp.int32))
 
         def body(x, xs):
             p, c = xs
             y, _, new_c = self._block(x, p, None, positions=positions,
-                                      cache=c, cache_len=jnp.zeros((), jnp.int32))
+                                      cache=c, cache_len=len0, serve=serve)
             return y, new_c
 
         h, new_layer_cache = jax.lax.scan(body, h,
@@ -486,7 +624,8 @@ class DecoderLM:
         logits = tagging.dense_site(h, params["head"]["w"], None,
                                     self.head_spec)
         cache = dict(new_layer_cache)
-        cache["len"] = jnp.asarray(h.shape[1], jnp.int32)
+        slen = jnp.asarray(h.shape[1], jnp.int32)
+        cache["len"] = (jnp.full((b,), slen) if serve is not None else slen)
         return logits, cache
 
     # ------------------------------------------------------------------
@@ -630,6 +769,12 @@ class DecoderLM:
         # decode: one token against a cache of length s
         cache = jax.eval_shape(lambda: self.init_cache(b, s))
         return {"tokens": sds((b,), i32), "cache": cache}
+
+
+def _kv_cache_sub(cache: dict) -> dict:
+    """KV-cache entries of a layer cache (payloads + optional fp8 scales)."""
+    return {k: cache[k] for k in ("k", "v", "k_scale", "v_scale")
+            if k in cache}
 
 
 def _sub(fs: Optional[dict], prefix: str) -> Optional[dict]:

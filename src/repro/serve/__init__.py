@@ -1,0 +1,25 @@
+"""Serving stack: decode-time KV caching and continuous batching.
+
+The training side of the repo reproduces the paper's SP-NGD optimizer; this
+package is the inference side the ROADMAP north-star implies ("heavy traffic
+from millions of users"). It builds on the same kernel substrate:
+
+* :class:`ServeConfig` — the knobs (ring vs dense cache, fp8 vs f32 payload,
+  kernel backend) threaded through ``DecoderLM.init_cache / prefill /
+  decode_step``.
+* :mod:`repro.serve.cache` — ring-buffer KV cache layout helpers and byte
+  accounting (fp8 e4m3 payload + per-row f32 scales via ``repro.quant``).
+* :class:`ContinuousBatcher` — slot-based continuous batching over
+  variable-length requests driving one jitted decode step.
+
+The decode hot path is the ``swa_decode`` kernel op
+(``repro.kernels.dispatch``): single-query flash attention over the cache,
+dequantizing fp8 payloads on read in VMEM.
+"""
+
+from repro.serve.cache import cache_bytes, ring_capacity
+from repro.serve.config import ServeConfig
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ServeConfig", "ContinuousBatcher", "Request", "cache_bytes",
+           "ring_capacity"]

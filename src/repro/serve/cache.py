@@ -1,0 +1,68 @@
+"""Ring-buffer KV cache layout helpers.
+
+Layout (per layer, batch b, capacity C, KV heads, head dim hd):
+
+* payload ``k``/``v``: (L, b, C, KV, hd) — fp8 (e4m3/e5m2) or f32. The
+  quantization row is one (token, KV head) vector over hd, so dequant needs
+  exactly one multiply per cache row — the same ``repro.quant`` row codec
+  the optimizer uses for factor storage/wire.
+* scales ``k_scale``/``v_scale``: (L, b, C, KV) f32 (fp8 payloads only).
+* ``len``: (b,) i32 — each sequence's absolute decode position (== tokens
+  cached). Token at position p lives in slot ``p % C``; the visibility
+  contract is pinned in ``repro.kernels.ref.swa_decode_slot_positions``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ring_capacity(window: int, max_len: int) -> int:
+    """Slots the ring needs: the window, but never more than the sequence
+    budget (a window longer than ``max_len`` can't fill past max_len)."""
+    if window <= 0:
+        raise ValueError("ring cache needs window > 0 (window=0 is full "
+                         "causal: use the dense layout)")
+    return min(window, max_len)
+
+
+def encode_rows(x: jax.Array, fmt: str | None, scale_mode: str):
+    """Quantize cache rows (..., hd) to (payload, scale (...,)) via the
+    ``repro.quant`` row codec; ``fmt=None`` stores f32 with no scale."""
+    if fmt is None:
+        return x.astype(jnp.float32), None
+    from repro.quant import quant
+    return quant.quantize_rows(x.astype(jnp.float32), fmt, scale_mode)
+
+
+def write_slot(cache: jax.Array, new: jax.Array, slot: jax.Array) -> jax.Array:
+    """Write one decode step into per-sequence ring slots.
+
+    cache (b, C, ...), new (b, 1, ...), slot (b,) i32 — each sequence lands
+    in its own slot (``pos % C``), so the update is a vmapped
+    dynamic_update_slice over the batch axis."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=0)
+    )(cache, new, slot)
+
+
+def prefill_gather_index(seq_len: int, capacity: int) -> np.ndarray:
+    """Source position feeding each ring slot after prefilling ``seq_len``
+    tokens: the latest position p <= seq_len - 1 with ``p % capacity == s``
+    (the state ``seq_len`` sequential ring writes would leave). Slots no
+    position maps to (seq_len < capacity) come out NEGATIVE — the caller
+    zero-fills them; the position contract masks them as unwritten."""
+    s = np.arange(capacity)
+    return s + capacity * ((seq_len - 1 - s) // capacity)
+
+
+def cache_bytes(cache: dict) -> int:
+    """Total KV-cache bytes (payload + scales; excludes non-KV state)."""
+    total = 0
+    for key in ("k", "v", "k_scale", "v_scale"):
+        if key in cache:
+            a = cache[key]
+            total += int(np.prod(a.shape)) * a.dtype.itemsize
+    return total
