@@ -9,6 +9,14 @@ by ``np.savez`` — they reload as opaque void dtypes — so leaves with an
 ml_dtypes dtype are stored as unsigned-int bit views with the true dtype
 name appended to the key (``...|payload@float8_e4m3fn``); restore views the
 bits back. Bit-exact round trip for every dtype in the tree.
+
+The chunked refresh pipeline's state (``opt_state["pipeline"]``: cursor,
+captured raw stats, valid latches — all jnp leaves) flattens through the
+same path with no special casing, so a checkpoint taken mid-drain resumes
+bit-identically at the same chunk index (pinned by
+tests/test_checkpoint_roundtrip.py). ``SPNGD.upgrade_state`` handles the
+cross-config cases: it seeds a fresh idle pipeline into pre-pipeline
+checkpoints and drops the key when resuming with ``refresh_chunks == 1``.
 """
 
 from __future__ import annotations

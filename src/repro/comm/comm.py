@@ -86,6 +86,19 @@ fp8 is reserved for the Stage-3 statistics leg.
 ``gather_stat_bytes`` / :meth:`FactorReducer.gather_bytes_per_stat` price
 this leg for the IntervalController ledger (0 for replicated stats — no
 gather runs).
+
+Chunked-drain interaction
+-------------------------
+Under the chunked refresh pipeline (``NGDConfig.refresh_chunks > 1``,
+:mod:`repro.core.pipeline`) Stage 3 is untouched: the capture step still
+runs ONE reduce per factor family, exactly as inline. Only the return leg
+moves — each drain chunk re-enters :class:`~repro.comm.stage4.Stage4Inverter`
+for its own (family, stat) subset, so ``gather_stat`` runs once per chunk
+instead of once per refresh, over the same axes with the same payloads.
+Total gather bytes per refresh are identical (the chunks partition the
+stats); only the per-step timing changes. Scatter decisions, out_specs,
+and the byte ledger are therefore pipeline-invariant and need no
+re-pricing.
 """
 
 from __future__ import annotations

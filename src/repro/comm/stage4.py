@@ -30,6 +30,14 @@ GSPMD level, inside the refresh ``lax.cond`` — the factors already LEFT
 the Stage-3 manual region scattered, so this region just re-binds the same
 layout). Statistics whose leading dim could not scatter fall back to the
 replicated inverse, exactly the pre-sharding behaviour.
+
+The same property makes ``invert`` callable from the chunked refresh
+pipeline's ``lax.switch`` branches (``refresh_chunks > 1``,
+:mod:`repro.core.pipeline`): each drain chunk invokes it for its subset of
+full-kind stats from a fast step's GSPMD level, one chunk per step. The
+per-call contract is unchanged — ownership, gather axes, and wire bytes
+per stat are identical to the inline refresh; the pipeline only changes
+WHEN each stat's invert+gather executes, not what it does.
 """
 
 from __future__ import annotations

@@ -77,6 +77,19 @@ class NGDConfig:
                                      # the ns_res=-1 sentinel (repro.obs
                                      # consumes this; off by default so the
                                      # metric tree is unchanged)
+    refresh_chunks: int = 1          # chunked refresh pipeline
+                                     # (repro.core.pipeline): >1 splits
+                                     # every refresh's Stage-4 inversions
+                                     # + gathers into this many chunks,
+                                     # executed one per subsequent fast
+                                     # step and activated atomically
+                                     # K+1 steps after the capture.
+                                     # Requires double_buffer; the
+                                     # IntervalController must run with
+                                     # min_interval = refresh_chunks + 1
+                                     # so a drain finishes before the
+                                     # next capture. 1 = inline refresh
+                                     # (the pre-pipeline behaviour).
 
 
 def _dense_leaf_shape(leaf) -> tuple:
@@ -134,6 +147,18 @@ class SPNGD:
                                       # step builder (set_stage4)
         from repro.quant import parse_factor_dtype
         self._fp8 = parse_factor_dtype(cfg.factor_dtype)  # fmt key or None
+        self.pipeline = None          # RefreshPipeline when refresh_chunks>1
+        if cfg.refresh_chunks > 1:
+            if not cfg.double_buffer:
+                raise ValueError("refresh_chunks > 1 needs double_buffer: "
+                                 "the drain writes precond_next while the "
+                                 "fast path consumes precond")
+            if cfg.inverse_info:
+                raise ValueError("inverse_info is unavailable with "
+                                 "refresh_chunks > 1: the capture step "
+                                 "runs no inversions to report on")
+            from repro.core.pipeline import RefreshPipeline
+            self.pipeline = RefreshPipeline(self, cfg.refresh_chunks)
 
     def set_stage4(self, inverter) -> None:
         """Attach (or detach, with None) a
@@ -280,17 +305,27 @@ class SPNGD:
                 # preconditioned step (the pipeline's one-step warm-up).
                 entry["precond_next"] = dict(entry["precond"])
             curv[fam] = entry
-        return {
+        state = {
             "step": jnp.zeros((), jnp.int32),
             "velocity": jax.tree.map(jnp.zeros_like, params),
             "curv": curv,
         }
+        if self.pipeline is not None:
+            state["pipeline"] = self.pipeline.init_state()
+        return state
 
     # ---- curvature refresh (Algorithm 1's on-refresh work) ----
 
-    def _refresh_family(self, fam: str, raw: dict, curv: dict,
-                        flags: dict, lam, n_a, n_g):
-        info = self.infos[fam]
+    def _shift_history(self, fam: str, raw: dict, curv: dict,
+                       flags: dict, n_a, n_g):
+        """Per-family pre-inversion refresh work: decode + normalize the raw
+        sums, measure the Algorithm-2 similarities against history, and
+        shift X₋₁/X₋₂ for the flagged statistics. Shared by the inline
+        refresh (:meth:`_refresh_family`) and the pipeline's capture step
+        (:meth:`_apply_capture`), which parks the normalized statistics and
+        defers the inversions. Returns ``(normalized, new_prev, new_prev2,
+        sims)`` — ``normalized[key]`` is the post-select view (the fresh
+        statistic when flagged, the decoded X₋₁ otherwise)."""
         cfg = self.cfg
         new_prev, new_prev2, sims = {}, {}, {}
         normalized = {}
@@ -337,6 +372,16 @@ class SPNGD:
                 if cfg.history >= 2:
                     new_prev2[key] = sel(curv["prev"][key],
                                          curv["prev2"][key])
+        if cfg.history < 2:
+            new_prev2 = curv["prev2"]
+        return normalized, new_prev, new_prev2, sims
+
+    def _refresh_family(self, fam: str, raw: dict, curv: dict,
+                        flags: dict, lam, n_a, n_g):
+        info = self.infos[fam]
+        cfg = self.cfg
+        normalized, new_prev, new_prev2, sims = self._shift_history(
+            fam, raw, curv, flags, n_a, n_g)
 
         any_flag = functools.reduce(
             jnp.logical_or, [flags[f"{fam}.{k}"] for k in raw], jnp.asarray(False))
@@ -404,10 +449,7 @@ class SPNGD:
                    "precond_next": precond}
         else:
             out = {"prev": new_prev, "precond": precond}
-        if cfg.history >= 2:
-            out["prev2"] = new_prev2
-        else:
-            out["prev2"] = curv["prev2"]
+        out["prev2"] = new_prev2
         return out, sims, inv_info
 
     def _stat_inverse(self, fam: str, key: str, stat: jax.Array, kind: str,
@@ -481,7 +523,8 @@ class SPNGD:
     # ---- full update assembly ----
 
     def _finish(self, params, state, grads, curv, lam, lr, mom, loss, aux,
-                sims, inverse_info: Optional[dict] = None):
+                sims, inverse_info: Optional[dict] = None,
+                extra_metrics: Optional[dict] = None):
         from repro.obs.tracing import STAGE_PRECOND
         cfg = self.cfg
         # preconditioned updates for sited params
@@ -526,12 +569,16 @@ class SPNGD:
 
         params_out = _unflatten_paths(new_p, like=params)
         vel_out = _unflatten_paths(new_v, like=params)
-        state_out = {"step": state["step"] + 1, "velocity": vel_out,
+        # spread: auxiliary state (e.g. the refresh pipeline's cursor/raw
+        # store, already advanced by the caller) rides through unchanged
+        state_out = {**state, "step": state["step"] + 1, "velocity": vel_out,
                      "curv": curv}
         metrics = {"loss": loss, "sims": sims,
                    "grad_norm": jnp.sqrt(gsq), "update_norm": jnp.sqrt(usq)}
         if inverse_info:
             metrics["inverse_info"] = inverse_info
+        if extra_metrics:
+            metrics.update(extra_metrics)
         if isinstance(aux, dict):
             metrics.update({k: v for k, v in aux.items()
                             if isinstance(v, jax.Array) and v.ndim == 0})
@@ -552,7 +599,14 @@ class SPNGD:
 
     def apply_update(self, params, state, grads, raw, counts, flags,
                      lam, lr, mom, loss, aux):
-        """Refresh curvature from raw sums (per ``flags``) + apply Eq. 23."""
+        """Refresh curvature from raw sums (per ``flags``) + apply Eq. 23.
+
+        With the chunked pipeline on (``refresh_chunks > 1``) this is the
+        CAPTURE step: history/similarities update as usual but the
+        inversions are deferred to the next K fast steps' drains."""
+        if self.pipeline is not None:
+            return self._apply_capture(params, state, grads, raw, counts,
+                                       flags, lam, lr, mom, loss, aux)
         curv, sims, inv_info = {}, {}, {}
         for fam in raw:
             n_a, n_g = counts[fam]
@@ -564,6 +618,52 @@ class SPNGD:
         return self._finish(params, state, grads, curv, lam, lr, mom,
                             loss, aux, sims, inverse_info=inv_info)
 
+    def _apply_capture(self, params, state, grads, raw, counts, flags,
+                       lam, lr, mom, loss, aux):
+        """Pipeline-mode refresh trigger: normalize + measure sims + shift
+        history (so Algorithm 2 sees this step's similarities), park the
+        normalized statistics in the raw store, and restart the drain
+        cursor. No inversion runs here — this step's cost over a fast step
+        is capture + Stage-3 reduce only. A pending (fully drained, not yet
+        activated) refresh flips first so it is consumed, not lost."""
+        pipe = state["pipeline"]
+        curv_in = self.pipeline.flip(state["curv"], pipe)
+        curv, sims = {}, {}
+        new_raw, new_valid = {}, {}
+        for fam in raw:
+            n_a, n_g = counts[fam]
+            normalized, new_prev, new_prev2, s = self._shift_history(
+                fam, raw[fam], curv_in[fam], flags, n_a, n_g)
+            sims.update(s)
+            curv[fam] = {**curv_in[fam], "prev": new_prev,
+                         "prev2": new_prev2}
+            new_raw[fam] = normalized
+            new_valid[fam] = {
+                k: jnp.logical_or(pipe["valid"][fam][k],
+                                  flags[f"{fam}.{k}"])
+                for k in raw[fam]}
+        pipe = {"cursor": jnp.zeros((), jnp.int32), "raw": new_raw,
+                "valid": new_valid}
+        state = {**state, "pipeline": pipe}
+        extra = {"refresh_inflight": jnp.asarray(
+            self.pipeline.chunks + 1, jnp.int32)}
+        return self._finish(params, state, grads, curv, lam, lr, mom,
+                            loss, aux, sims, extra_metrics=extra)
+
+    def fast_curv(self, state, lam):
+        """The fast path's curvature view + any pipeline progress: drains
+        one chunk (and/or flips) when the pipeline is on, otherwise the
+        plain double-buffer activation. Returns ``(state, curv, extra)``
+        where ``extra`` feeds ``_finish``'s metrics (``refresh_inflight``
+        in pipeline mode, empty otherwise). Every fast-step builder goes
+        through here so the drain cannot be skipped by a schedule."""
+        if self.pipeline is None:
+            return state, self._activate(state["curv"]), {}
+        curv, pipe, inflight = self.pipeline.drain(
+            state["curv"], state["pipeline"], lam)
+        return ({**state, "pipeline": pipe}, curv,
+                {"refresh_inflight": inflight})
+
     def step(self, params, state, batch, flags: dict, lam, lr, mom,
              rng: Optional[jax.Array] = None):
         """Full step with curvature capture. ``flags`` maps stat_name ->
@@ -574,12 +674,13 @@ class SPNGD:
                                  lam, lr, mom, loss, aux)
 
     def step_fast(self, params, state, batch, lam, lr, mom):
-        """No capture, no refresh: backward + stale-preconditioned update."""
+        """No capture, no refresh: backward + stale-preconditioned update
+        (plus one pipeline drain chunk when ``refresh_chunks > 1``)."""
         (loss, aux), grads = jax.value_and_grad(
             self.loss_fn, has_aux=True)(params, None, batch)
-        return self._finish(params, state, grads,
-                            self._activate(state["curv"]), lam, lr, mom,
-                            loss, aux, {})
+        state, curv, extra = self.fast_curv(state, lam)
+        return self._finish(params, state, grads, curv, lam, lr, mom,
+                            loss, aux, {}, extra_metrics=extra)
 
     # ---- double-buffer plumbing ----
 
@@ -588,8 +689,11 @@ class SPNGD:
         becomes the active preconditioner for THIS step (``_finish`` then
         persists the swap into the state). Identity when the pipeline is
         off. The refresh path performs its own activation inside
-        ``_refresh_family``; this one covers the fast (no-capture) steps."""
-        if not self.cfg.double_buffer:
+        ``_refresh_family``; this one covers the fast (no-capture) steps.
+        With the chunked pipeline on this is also identity — activation is
+        then the drain's gated flip (``RefreshPipeline.flip``), never an
+        unconditional swap of a half-written ``precond_next``."""
+        if not self.cfg.double_buffer or self.pipeline is not None:
             return curv
         return {fam: {**entry, "precond": entry["precond_next"]}
                 for fam, entry in curv.items()}
@@ -601,7 +705,17 @@ class SPNGD:
         staged buffer from the active one (the first activation is then a
         no-op — the run continues exactly where the old semantics left it);
         a double-buffered checkpoint entering a single-buffer run drops the
-        staged copy. Same-layout states pass through unchanged."""
+        staged copy. Same-layout states pass through unchanged.
+
+        The chunked-pipeline state follows the same rules: a checkpoint
+        without it entering a ``refresh_chunks > 1`` run seeds an idle
+        pipeline (cursor parked, nothing valid — the next capture starts
+        it); a mid-drain checkpoint entering an inline run drops the
+        pipeline state, losing only the not-yet-activated refresh (the
+        next inline refresh recomputes it). A mid-drain state resuming
+        under the SAME chunk count continues bit-identically — the cursor,
+        raw store and valid latches are ordinary jnp leaves."""
+        state = dict(state)
         curv = {}
         for fam, entry in state["curv"].items():
             entry = dict(entry)
@@ -610,6 +724,10 @@ class SPNGD:
             if not self.cfg.double_buffer:
                 entry.pop("precond_next", None)
             curv[fam] = entry
+        if self.pipeline is not None and "pipeline" not in state:
+            state["pipeline"] = self.pipeline.init_state()
+        if self.pipeline is None:
+            state.pop("pipeline", None)
         return {**state, "curv": curv}
 
 

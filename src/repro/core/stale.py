@@ -59,13 +59,20 @@ class IntervalController:
     """Implements Algorithm 1's bookkeeping + Algorithm 2's interval rule."""
 
     def __init__(self, stat_names: list[str], alpha: float = 0.1,
-                 max_interval: int = 0,
+                 max_interval: int = 0, min_interval: int = 1,
                  bytes_per_stat: Optional[dict[str, int]] = None,
                  wire_bytes_per_stat: Optional[dict[str, int]] = None,
                  wire_level_bytes_per_stat: Optional[dict] = None,
                  gather_bytes_per_stat: Optional[dict[str, int]] = None):
         self.alpha = alpha
         self.max_interval = max_interval          # 0 = unbounded (paper)
+        # Floor on Algorithm 2's shrink: with the chunked refresh pipeline
+        # (repro.core.pipeline) a refresh stays in flight for K chunk steps
+        # plus the activation step after its capture, so the controller must
+        # not schedule the next capture before the drain completes —
+        # train.py passes refresh_chunks + 1. The default (1) is the paper's
+        # unconstrained rule and leaves the Fibonacci recurrence untouched.
+        self.min_interval = max(1, min_interval)
         self.stats = {n: StatState() for n in stat_names}
         if bytes_per_stat:
             for n, b in bytes_per_stat.items():
@@ -129,6 +136,7 @@ class IntervalController:
                 delta = st.delta_m1
             else:
                 delta = st.delta + st.delta_m1
+            delta = max(delta, self.min_interval)
             if self.max_interval:
                 delta = min(delta, self.max_interval)
             st.delta_m1 = st.delta
@@ -156,6 +164,7 @@ class IntervalController:
         return {
             "alpha": self.alpha,
             "max_interval": self.max_interval,
+            "min_interval": self.min_interval,
             "steps": self.steps,
             "total_bytes": self.total_bytes,
             "dense_bytes": self.dense_bytes,
@@ -174,8 +183,10 @@ class IntervalController:
 
     @classmethod
     def from_state_dict(cls, state: dict) -> "IntervalController":
+        # pre-PR-10 checkpoints have no pipeline floor: resume unconstrained
         ctrl = cls(list(state["stats"]), alpha=state["alpha"],
-                   max_interval=state["max_interval"])
+                   max_interval=state["max_interval"],
+                   min_interval=state.get("min_interval", 1))
         ctrl.steps = state["steps"]
         ctrl.total_bytes = state["total_bytes"]
         ctrl.dense_bytes = state["dense_bytes"]

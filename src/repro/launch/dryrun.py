@@ -91,7 +91,8 @@ def build_case(arch: str, shape_name: str, mesh, *,
                inverse_method: str = "eigh", comm_strategy: str = "dense",
                wire_dtype: Optional[str] = None,
                devices_per_host: Optional[int] = None,
-               inverse_sharding: bool = False):
+               inverse_sharding: bool = False,
+               refresh_chunks: int = 1):
     """Returns (step_fn, example_args, n_params, label).
 
     schedule: "auto" (GSPMD everything — baseline) | "shardmap" (the paper's
@@ -111,7 +112,11 @@ def build_case(arch: str, shape_name: str, mesh, *,
     column. inverse_sharding: Stage-4 distribution (repro.comm.Stage4
     Inverter) — each device inverts only its reducer-owned factor chunk and
     the preconditioners all-gather (implies the double buffer), so the
-    dry-run compiles the sharded refresh at production mesh scale."""
+    dry-run compiles the sharded refresh at production mesh scale.
+    refresh_chunks: chunked refresh pipeline (repro.core.pipeline) — K>1
+    compiles the capture step (no inline inversions; Stage-4 drains over
+    the next K fast steps), so the dry-run's cost/memory analysis shows
+    the overlapped step programs. Implies the double buffer."""
     cfg = effective_config(arch, shape_name)
     if backend != "auto":
         cfg = dataclasses.replace(cfg, backend=backend)
@@ -181,7 +186,9 @@ def build_case(arch: str, shape_name: str, mesh, *,
                               inverse_method=inverse_method,
                               factor_dtype=FACTOR_DTYPES[factor_dtype],
                               inverse_sharding=inverse_sharding,
-                              double_buffer=inverse_sharding),
+                              double_buffer=(inverse_sharding
+                                             or refresh_chunks > 1),
+                              refresh_chunks=refresh_chunks),
                     sharding_hook=shd.factor_sharding_hook(mesh))
         accum = pick_accum(cfg, shape, data_shards)
         if schedule == "shardmap":
@@ -256,7 +263,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
              inverse_method: str = "eigh", comm_strategy: str = "dense",
              wire_dtype: Optional[str] = None,
              devices_per_host: Optional[int] = None,
-             inverse_sharding: bool = False) -> dict:
+             inverse_sharding: bool = False,
+             refresh_chunks: int = 1) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = len(mesh.devices.flatten())
     shape = INPUT_SHAPES[shape_name]
@@ -266,6 +274,7 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
            "factor_dtype": factor_dtype, "inverse_method": inverse_method,
            "comm_strategy": comm_strategy,
            "inverse_sharding": inverse_sharding,
+           "refresh_chunks": refresh_chunks,
            "mesh": "2x16x16" if multi_pod else "16x16", "chips": n_chips}
     try:
         with compat.set_mesh(mesh):
@@ -275,7 +284,8 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
                 factor_dtype=factor_dtype, inverse_method=inverse_method,
                 comm_strategy=comm_strategy, wire_dtype=wire_dtype,
                 devices_per_host=devices_per_host,
-                inverse_sharding=inverse_sharding)
+                inverse_sharding=inverse_sharding,
+                refresh_chunks=refresh_chunks)
             reducer = getattr(step, "reducer", None)
             if reducer is not None:
                 rec["comm"] = reducer.scatter_report()
@@ -469,6 +479,13 @@ def main():
                          "chunk and preconditioners all-gather; implies the "
                          "double buffer and records per-layer inverse "
                          "timing + gather bytes in the scatter report")
+    ap.add_argument("--refresh-chunks", type=int, default=1,
+                    help="chunked refresh pipeline (repro.core.pipeline): "
+                         "K>1 compiles the capture step (no inline "
+                         "inversions; the Stage-4 work drains over the "
+                         "next K fast steps) — pair with --fast to see "
+                         "the drain-step program. Implies the double "
+                         "buffer")
     ap.add_argument("--tp-align", action="store_true")
     ap.add_argument("--rwkv-chunk", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
@@ -509,6 +526,8 @@ def main():
             variant += f"__dph{args.devices_per_host}"
     if args.inverse_sharding:
         variant += "__invshard"
+    if args.refresh_chunks > 1:
+        variant += f"__rc{args.refresh_chunks}"
     if args.tp_align:
         variant += "__tpalign"
     if args.rwkv_chunk:
@@ -540,7 +559,8 @@ def main():
                                    comm_strategy=args.comm_strategy,
                                    wire_dtype=args.wire_dtype,
                                    devices_per_host=args.devices_per_host,
-                                   inverse_sharding=args.inverse_sharding)
+                                   inverse_sharding=args.inverse_sharding,
+                                   refresh_chunks=max(1, args.refresh_chunks))
                 with open(path, "w") as f:
                     json.dump(rec, f, indent=1)
                 log.emit("dryrun_case", tag=tag,

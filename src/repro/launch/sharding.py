@@ -237,4 +237,8 @@ def opt_state_pspecs(opt_state_shape, params_specs, mesh):
     out = {"step": P(),
            "velocity": params_specs,
            "curv": jax.tree.map(curv_spec, opt_state_shape["curv"])}
+    if "pipeline" in opt_state_shape:
+        # raw stat store mirrors the curv factor shapes (leading block
+        # axis); cursor/valid are scalars and fall through to P()
+        out["pipeline"] = jax.tree.map(curv_spec, opt_state_shape["pipeline"])
     return out

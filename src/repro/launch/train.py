@@ -103,9 +103,10 @@ def make_fast_step(model, opt: SPNGD, accum: int = 1) -> Callable:
         (grads, loss_sum), _ = jax.lax.scan(
             body, (zeros, jnp.zeros((), jnp.float32)), micro)
         grads = jax.tree.map(lambda g: g / accum, grads)
-        return opt._finish(params, opt_state, grads,
-                           opt._activate(opt_state["curv"]),
-                           lam, lr, mom, loss_sum / accum, {}, {})
+        opt_state, curv, extra = opt.fast_curv(opt_state, lam)
+        return opt._finish(params, opt_state, grads, curv,
+                           lam, lr, mom, loss_sum / accum, {}, {},
+                           extra_metrics=extra)
 
     return fast_step
 
@@ -259,9 +260,14 @@ def make_shardmap_fast_step(model, opt: SPNGD, mesh, accum: int = 1,
         sm = compat.shard_map(inner, mesh=mesh, in_specs=(P(), batch_specs),
                               out_specs=(P(), P()), axis_names=set(dp))
         loss, grads = sm(params, batch)
-        return opt._finish(params, opt_state, grads,
-                           opt._activate(opt_state["curv"]),
-                           lam, lr, mom, loss, {}, {})
+        # fast_curv drains one refresh-pipeline chunk (refresh_chunks > 1)
+        # or performs the plain double-buffer activation. The drain runs
+        # OUTSIDE the manual region: Stage4Inverter opens its own shard_map
+        # for the chunk's shard-local inverses + gathers, exactly as the
+        # inline refresh path does.
+        opt_state, curv, extra = opt.fast_curv(opt_state, lam)
+        return opt._finish(params, opt_state, grads, curv,
+                           lam, lr, mom, loss, {}, {}, extra_metrics=extra)
 
     fast_step.reducer = reducer
     return fast_step
@@ -430,6 +436,16 @@ def main():
                     help="pipeline refreshes: inverses computed at step t "
                          "activate at t+1 while t consumes the previous "
                          "buffer (Algorithm 2 still governs staleness)")
+    ap.add_argument("--refresh-chunks", type=int, default=1,
+                    help="chunked refresh pipeline (repro.core.pipeline): "
+                         "K>1 turns each refresh into a capture step "
+                         "(Stage-2/3 + similarities only) followed by K "
+                         "drain chunks of Stage-4 inversions+gathers, one "
+                         "fused into each subsequent fast step, activated "
+                         "atomically K+1 steps after the capture. Implies "
+                         "--double-buffer and floors the refresh interval "
+                         "at K+1 so a drain always completes. 1 = inline "
+                         "refresh (default)")
     ap.add_argument("--full-config", action="store_true",
                     help="use the full (non-reduced) architecture")
     ap.add_argument("--metrics-jsonl", default=None, metavar="PATH",
@@ -455,7 +471,8 @@ def main():
     import dataclasses
 
     from repro.core.ngd import NGDConfig, SPNGD
-    from repro.obs import MetricsLogger, ProfileCapture, inverse_tally
+    from repro.obs import (STAGE_CHUNK, MetricsLogger, ProfileCapture,
+                           inverse_tally)
 
     log = MetricsLogger(args.metrics_jsonl)
     cfg = get_config(args.arch)
@@ -470,7 +487,9 @@ def main():
                 f"{n / 1e6:.1f}M params")
 
     inverse_sharding = args.inverse_sharding
-    double_buffer = args.double_buffer or inverse_sharding
+    refresh_chunks = max(1, args.refresh_chunks)
+    double_buffer = (args.double_buffer or inverse_sharding
+                     or refresh_chunks > 1)
     opt = SPNGD(model.loss, model.site_infos(), model.fstats,
                 model.site_counts,
                 NGDConfig(damping=args.damping, backend=args.backend,
@@ -478,14 +497,21 @@ def main():
                           factor_dtype=FACTOR_DTYPES[args.factor_dtype],
                           inverse_sharding=inverse_sharding,
                           double_buffer=double_buffer,
+                          refresh_chunks=refresh_chunks,
                           # metrics runs surface per-block Stage-4
-                          # diagnostics; default runs keep the seed tree
-                          inverse_info=log.enabled))
+                          # diagnostics; default runs keep the seed tree.
+                          # Capture steps run no inversions, so there is
+                          # nothing to report under the chunked pipeline
+                          inverse_info=log.enabled and refresh_chunks == 1))
     state = opt.init(params)
     comm_cfg = comm_lib.make_comm_config(args.comm_strategy, args.wire_dtype,
                                          backend=args.backend,
                                          devices_per_host=args.devices_per_host)
     ctrl = IntervalController(opt.stat_names(), alpha=0.1,
+                              # a drain takes K chunk steps + the flip:
+                              # never capture again before it finishes
+                              min_interval=(refresh_chunks + 1
+                                            if refresh_chunks > 1 else 1),
                               bytes_per_stat=opt.stat_bytes(),
                               wire_bytes_per_stat=opt.wire_bytes(comm_cfg),
                               wire_level_bytes_per_stat=opt.wire_level_bytes(
@@ -496,7 +522,8 @@ def main():
     ctrl.record_comm({"strategy": comm_cfg.strategy,
                       "wire_dtype": comm_cfg.wire_dtype,
                       "inverse_sharding": inverse_sharding,
-                      "double_buffer": double_buffer})
+                      "double_buffer": double_buffer,
+                      "refresh_chunks": refresh_chunks})
     data = token_batches(cfg.vocab, args.batch, args.seq, seed=0)
     lr_fn = polynomial_decay(args.lr, 0, args.steps, 4.0)
     step_j = jax.jit(make_train_step(model, opt, accum=args.accum))
@@ -511,7 +538,8 @@ def main():
              comm_strategy=comm_cfg.strategy,
              wire_dtype=comm_cfg.wire_dtype,
              inverse_sharding=inverse_sharding,
-             double_buffer=double_buffer)
+             double_buffer=double_buffer,
+             refresh_chunks=refresh_chunks)
     # per-block-size Stage-4 tallies need each stat's block size, which the
     # on-device info arrays don't carry — read it off the stats template
     block_sizes = {}
@@ -550,7 +578,14 @@ def main():
         if log.enabled:
             jax.block_until_ready(m["loss"])
             dt = _time.perf_counter() - t0
-            evt = {"kind": "refresh" if any(flags.values()) else "fast",
+            # chunked pipeline: refresh-trigger steps are CAPTUREs (no
+            # inversion runs inline), so the stream's "refresh" kind —
+            # which make_report amortizes the inline Stage-3/4 costs
+            # over — honestly goes to zero occurrences
+            trigger = any(flags.values())
+            kind = ("capture" if trigger and refresh_chunks > 1
+                    else "refresh" if trigger else "fast")
+            evt = {"kind": kind,
                    "lr": lr, "mom": mom,
                    "n_refreshed": sum(flags.values()),
                    "n_stats": len(flags),
@@ -558,6 +593,23 @@ def main():
                    "grad_norm": float(m["grad_norm"]),
                    "update_norm": float(m["update_norm"]),
                    "comm": ctrl.drain()}
+            if "refresh_inflight" in m:
+                # steps until the in-flight refresh activates: K+1 on the
+                # capture, K..1 across the drain, 0 when idle
+                infl = int(m["refresh_inflight"])
+                evt["refresh_inflight"] = infl
+                if kind == "fast" and 0 < infl <= refresh_chunks + 1:
+                    # per-chunk span: the step window this chunk (or, at
+                    # infl == 1, the activation flip) was fused into
+                    idx = refresh_chunks + 1 - infl
+                    chunk = (opt.pipeline.chunk_names(idx)
+                             if idx < refresh_chunks else [])
+                    log.emit("span",
+                             name=(f"{STAGE_CHUNK}[{idx}]"
+                                   if idx < refresh_chunks
+                                   else f"{STAGE_CHUNK}[flip]"),
+                             start=t0, dur=dt, depth=0, parent=None,
+                             step=t, stats=chunk)
             if "inverse_info" in m:
                 evt["inverse"] = inverse_tally(m["inverse_info"],
                                                block_sizes)

@@ -8,6 +8,7 @@ lives in ``experiments/make_report.py`` (overhead accounting) and
 
 from repro.obs.tracing import (
     STAGE_CAPTURE,
+    STAGE_CHUNK,
     STAGE_GATHER,
     STAGE_INVERSE,
     STAGE_PRECOND,
@@ -22,6 +23,7 @@ from repro.obs.metrics import SCHEMA_VERSION, MetricsLogger, inverse_tally
 
 __all__ = [
     "STAGE_CAPTURE",
+    "STAGE_CHUNK",
     "STAGE_GATHER",
     "STAGE_INVERSE",
     "STAGE_PRECOND",

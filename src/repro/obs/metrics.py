@@ -10,8 +10,25 @@ One :class:`MetricsLogger` owns all run-time telemetry output:
   - ``step``         — per training step: loss, lr, refresh decisions,
                        grad/update norms, step-time EMA + p50/p99 from a
                        rolling window, the IntervalController's drained
-                       byte-ledger deltas, NS/eigh inversion tallies
-  - ``span``         — host-side phase timings (:class:`~repro.obs.tracing.Span`)
+                       byte-ledger deltas, NS/eigh inversion tallies.
+                       Under the chunked refresh pipeline
+                       (``--refresh-chunks K>1``) the ``kind`` field
+                       distinguishes ``capture`` (refresh trigger, no
+                       inline inversions) from ``refresh``/``fast``, and
+                       ``refresh_inflight`` counts the steps until the
+                       in-flight refresh activates: K+1 on the capture and
+                       again on the first drain step (the capture does not
+                       advance the chunk cursor), counting down to 1 on
+                       the flip/activation step, 0 when idle
+  - ``span``         — host-side phase timings (:class:`~repro.obs.tracing.Span`).
+                       Pipeline drains additionally emit one
+                       ``spngd.pipeline.chunk[i]`` span per chunk step
+                       (``[flip]`` for the activation step) whose ``dur``
+                       is the full fused step's wall time and whose
+                       ``stats`` field lists the statistics the chunk
+                       inverted — make_report derives the amortized
+                       overlapped cost from these plus the fast-step dt
+                       baseline
   - ``probe``        — the overhead-accounting probe (stage-isolated
                        timings the report's decomposition table consumes)
   - ``console``      — mirror of every console line

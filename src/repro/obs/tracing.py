@@ -39,6 +39,10 @@ STAGE_REDUCE = "spngd.stage3.reduce"       # factor ReduceScatterV
 STAGE_INVERSE = "spngd.stage4.inverse"     # damped factor inversion
 STAGE_GATHER = "spngd.stage4.gather"       # preconditioner all-gather
 STAGE_PRECOND = "spngd.stage4.precond"     # A^-1 dW G^-1 apply
+# Chunked refresh pipeline (repro.core.pipeline): one drain chunk fused
+# into a fast step. STAGE_INVERSE / STAGE_GATHER nest under it, so trace
+# filters on the stage-4 scopes keep working when the refresh is chunked.
+STAGE_CHUNK = "spngd.pipeline.chunk"       # drain chunk inside a fast step
 
 
 def stage_scope(name: str):

@@ -14,9 +14,30 @@ stale state) — that is the standard continuous-batching trade: the step is
 one fixed-shape jit, and a wasted lane costs less than a recompile. Their
 outputs are discarded.
 
-Prefill jits once per distinct prompt length (documented trade-off: exact
-shapes beat padding for the short prompt distributions the benchs use; a
-production stack would bucket lengths).
+Prefill bucketing
+-----------------
+Prompts pad to the next power-of-two bucket, so the prefill jit cache holds
+O(log max_len) programs instead of one per distinct prompt length. Padding
+rides AFTER the prompt, which keeps it invisible end to end: causal masking
+means the real positions' logits never see the pad tokens, the jitted
+prefill overrides the sub-cache ``len`` to the TRUE length so decode resumes
+at the right position, and the junk the pad positions wrote into cache
+slots ``[s, S_b)`` is masked by the position contract (a slot is only
+visible once decode reaches its position — by which point decode has
+overwritten it with the real token). The one hazard is the ring: a bucket
+larger than the cache capacity would wrap pad writes over REAL keys still
+inside the window, so those prompts fall back to an exact-shape prefill
+(``bucket_prompts=False`` disables bucketing entirely).
+
+Sampling
+--------
+``temperature > 0`` switches the decode step from argmax to temperature /
+top-k sampling with one PRNG stream per request (``fold_in(seed, uid)``,
+then one split per generated token), so a request's tokens depend only on
+``(seed, uid, prompt, max_new)`` — never on slot assignment or admission
+order. ``temperature == 0`` (the default) keeps the pre-sampling greedy
+program exactly: no keys are threaded through the step, and outputs are
+bit-identical to the greedy batcher regardless of ``seed``.
 """
 
 from __future__ import annotations
@@ -47,27 +68,64 @@ class _Slot:
     out: list
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _sample(key, logits, temperature: float, top_k: int):
+    """Temperature / top-k sample one token id from a ``(V,)`` logit row.
+    ``top_k == 0`` means no truncation; ``top_k == 1`` reduces to argmax
+    (the masking keeps only the max before the categorical draw)."""
+    l = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(l, top_k)[0][-1]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    return jax.random.categorical(key, l).astype(jnp.int32)
+
+
 class ContinuousBatcher:
-    """Greedy-decoding continuous batcher over ``model`` with ``slots``
-    cache lanes of ``max_len`` tokens each."""
+    """Continuous batcher over ``model`` with ``slots`` cache lanes of
+    ``max_len`` tokens each. Greedy by default; ``temperature``/``top_k``
+    enable per-request seeded sampling (see module docstring)."""
 
     def __init__(self, model, params, serve: ServeConfig, *, slots: int,
-                 max_len: int):
+                 max_len: int, temperature: float = 0.0, top_k: int = 0,
+                 seed: int = 0, bucket_prompts: bool = True):
+        if temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
         self.model = model
         self.params = params
         self.serve = serve
         self.slots = slots
         self.max_len = max_len
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.bucket_prompts = bucket_prompts
         self.cache = model.init_cache(slots, max_len, serve=serve)
         self.tokens = np.zeros((slots,), np.int32)   # next input per lane
         self.active: list[Optional[_Slot]] = [None] * slots
-        self._prefill = {}           # prompt length -> jitted prefill
+        self._prefill = {}           # bucketed prompt length -> jitted prefill
+        self._base_key = jax.random.PRNGKey(seed)
+        self._keys = jax.random.split(self._base_key, slots)  # per-lane carry
 
-        @functools.partial(jax.jit, donate_argnums=(1,))
-        def step(params, cache, tokens):
-            logits, cache = model.decode_step(params, cache, tokens,
-                                              serve=serve)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        if self.temperature == 0.0:
+            # static greedy branch: the exact pre-sampling program, no keys
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def step(params, cache, tokens):
+                logits, cache = model.decode_step(params, cache, tokens,
+                                                  serve=serve)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        else:
+            temp, tk = self.temperature, self.top_k
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def step(params, cache, tokens, keys):
+                logits, cache = model.decode_step(params, cache, tokens,
+                                                  serve=serve)
+                split = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+                tok = jax.vmap(lambda k, l: _sample(k, l, temp, tk))(
+                    split[:, 0], logits)
+                return tok, cache, split[:, 1]
 
         self._step = step
 
@@ -86,13 +144,32 @@ class ContinuousBatcher:
         slot = free[0]
         prompt = np.asarray(req.prompt, np.int32).reshape(1, -1)
         s = prompt.shape[1]
-        if s not in self._prefill:
-            self._prefill[s] = jax.jit(functools.partial(
-                self.model.prefill, max_len=self.max_len, serve=self.serve))
-        logits, sub = self._prefill[s](self.params,
-                                       {"tokens": jnp.asarray(prompt)})
+        cap = self.cache["k"].shape[2]               # ring capacity / max_len
+        sb = _next_pow2(s) if self.bucket_prompts else s
+        if sb > cap:
+            sb = s    # pad writes past capacity would wrap over real keys
+        if sb != s:
+            prompt = np.pad(prompt, ((0, 0), (0, sb - s)))
+        if sb not in self._prefill:
+            def _prefill_fn(params, batch, true_len):
+                logits, sub = self.model.prefill(params, batch,
+                                                 max_len=self.max_len,
+                                                 serve=self.serve)
+                # decode resumes at the TRUE length, not the bucket
+                sub = {**sub, "len": jnp.full_like(sub["len"], true_len)}
+                return logits[0, true_len - 1], sub
+            self._prefill[sb] = jax.jit(_prefill_fn)
+        last, sub = self._prefill[sb](self.params,
+                                      {"tokens": jnp.asarray(prompt)},
+                                      jnp.int32(s))
         self.cache = _scatter(self.cache, sub, slot)
-        first = int(jnp.argmax(logits[0, -1]))
+        if self.temperature == 0.0:
+            first = int(jnp.argmax(last))
+        else:
+            key = jax.random.fold_in(self._base_key, req.uid)
+            key, sub_key = jax.random.split(key)
+            first = int(_sample(sub_key, last, self.temperature, self.top_k))
+            self._keys = self._keys.at[slot].set(key)
         self.tokens[slot] = first
         self.active[slot] = _Slot(uid=req.uid, remaining=req.max_new - 1,
                                   out=[first])
@@ -101,8 +178,12 @@ class ContinuousBatcher:
     def step(self) -> dict:
         """One batched decode step; returns {uid: finished token list} for
         requests that completed on this step."""
-        next_tok, self.cache = self._step(self.params, self.cache,
-                                          jnp.asarray(self.tokens))
+        if self.temperature == 0.0:
+            next_tok, self.cache = self._step(self.params, self.cache,
+                                              jnp.asarray(self.tokens))
+        else:
+            next_tok, self.cache, self._keys = self._step(
+                self.params, self.cache, jnp.asarray(self.tokens), self._keys)
         next_tok = np.asarray(next_tok)
         done = {}
         for i, st in enumerate(self.active):

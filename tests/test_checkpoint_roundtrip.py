@@ -118,6 +118,65 @@ def test_checkpoint_roundtrip_double_buffer(tmp_path):
     assert c3.state_dict() == ctrl.state_dict()
 
 
+def test_checkpoint_roundtrip_mid_pipeline(tmp_path):
+    """ISSUE-10: a checkpoint taken MID-DRAIN of the chunked refresh
+    pipeline (cursor between capture and flip, raw store + valid latches
+    populated) must resume bit-identically. With refresh_chunks=2 and a
+    capture-every-3-steps cadence, BREAK_AT=3 lands at cursor=2 — both
+    chunks processed, the flip still pending — so the resumed run's very
+    first step is the activation the interrupted run never applied."""
+    k = 2
+    cfg = NGDConfig(damping=1e-3, double_buffer=True, refresh_chunks=k)
+
+    def advance(opt, ctrl, params, state, t):
+        # manual cadence: capture at t=1, 4, ...; fast (drain) otherwise
+        on = (t % (k + 1) == 1)
+        flags = {n: on for n in opt.stat_names()}
+        if on:
+            jf = {n: jnp.asarray(True) for n in opt.stat_names()}
+            params, state, m = jax.jit(opt.step)(params, state, _data(seed=t),
+                                                 jf, 1e-3, 0.1, 0.9)
+            ctrl.update(t, flags, {n: (float(v[0]), float(v[1]))
+                                   for n, v in m["sims"].items()})
+        else:
+            params, state, m = jax.jit(opt.step_fast)(params, state,
+                                                      _data(seed=t),
+                                                      1e-3, 0.1, 0.9)
+            ctrl.update(t, flags, {})
+        return params, state
+
+    def make():
+        params, opt, state, _ = _make(cfg)
+        ctrl = IntervalController(opt.stat_names(), alpha=0.1,
+                                  min_interval=k + 1,
+                                  bytes_per_stat=opt.stat_bytes())
+        return params, opt, state, ctrl
+
+    params, opt, state, ctrl = make()
+    for t in range(1, STEPS + 1):
+        params, state = advance(opt, ctrl, params, state, t)
+
+    p2, opt2, s2, c2 = make()
+    for t in range(1, BREAK_AT + 1):
+        p2, s2 = advance(opt2, c2, p2, s2, t)
+    assert int(s2["pipeline"]["cursor"]) == k          # mid-drain, pre-flip
+    assert all(bool(v) for v in jax.tree.leaves(s2["pipeline"]["valid"]))
+    save_checkpoint(str(tmp_path), BREAK_AT, p2, s2, c2.state_dict())
+
+    r = restore_checkpoint(str(tmp_path))
+    _, opt3, _, _ = make()
+    p3, s3 = r["params"], opt3.upgrade_state(r["opt_state"])
+    _assert_trees_bitwise_equal(s3, s2)        # same layout: passthrough
+    c3 = IntervalController.from_state_dict(r["controller"])
+    assert c3.min_interval == k + 1
+    for t in range(BREAK_AT + 1, STEPS + 1):
+        p3, s3 = advance(opt3, c3, p3, s3, t)
+
+    _assert_trees_bitwise_equal(p3, params)
+    _assert_trees_bitwise_equal(s3, state)
+    assert c3.state_dict() == ctrl.state_dict()
+
+
 def test_pre_pr7_checkpoint_single_buffer_fallback(tmp_path):
     """A pre-PR-7 checkpoint (no staged buffer, no gather ledger) must load
     into a double-buffered run: ``upgrade_state`` seeds the staged buffer

@@ -1,0 +1,200 @@
+"""Chunked refresh pipeline unit tests (ISSUE-10 tentpole).
+
+The state machine under test (repro.core.pipeline.RefreshPipeline):
+
+  capture step   Stage-2/3 + history shift run inline, the normalized
+                 statistics land in the pipeline's raw store, cursor <- 0.
+                 NO inversions run on this step.
+  K drain steps  fast step i fuses chunk i's Stage-4 inversions + gathers
+                 into its program, writing into precond_next.
+  flip step      cursor == K: precond_next -> precond (the double-buffer
+                 activation contract), cursor parks at K+1 (idle).
+
+So a refresh captured at step t activates at step t + K + 1, vs t + 1 for
+the inline double buffer — the pinned ``refresh_inflight`` sequence is
+K+1 on the capture AND the first drain step (the capture does not advance
+the cursor), counting down to 1 on the flip step, 0 when idle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ngd import NGDConfig, SPNGD
+from repro.core.pipeline import RefreshPipeline
+from repro.core.stale import IntervalController
+
+from test_ngd_optimizer import (loss_fn, fstats_fn, counts_fn, INFOS, _data,
+                                D_IN, D_H)
+
+K = 2
+ARGS = (1e-3, 0.1, 0.0)          # lam, lr, mom (mom off: no velocity mixing)
+
+
+def _opt(**kw):
+    rng = np.random.RandomState(7)
+    params = {"w1": jnp.asarray(rng.randn(D_IN, D_H) * 0.4, jnp.float32),
+              "w2": jnp.asarray(rng.randn(D_H, 4) * 0.4, jnp.float32)}
+    opt = SPNGD(loss_fn, INFOS, fstats_fn, counts_fn,
+                NGDConfig(damping=1e-3, **kw))
+    return opt, params, opt.init(params), _data()
+
+
+def _bitwise_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="double_buffer"):
+        _opt(refresh_chunks=2)
+    with pytest.raises(ValueError, match="inverse_info"):
+        _opt(refresh_chunks=2, double_buffer=True, inverse_info=True)
+    opt, *_ = _opt(double_buffer=True)
+    assert opt.pipeline is None                  # K == 1: no pipeline
+    with pytest.raises(ValueError):
+        RefreshPipeline(opt, 0)
+
+
+def test_schedule_partitions_every_stat_once():
+    opt, *_ = _opt(double_buffer=True, refresh_chunks=K)
+    pipe = opt.pipeline
+    assert pipe.chunks == K
+    units = [u for chunk in pipe.schedule for u in chunk]
+    assert len(units) == len(set(units))         # disjoint
+    assert {f"{fam}.{key}" for fam, key in units} == set(opt.stat_names())
+    # K beyond the stat count is legal: trailing chunks are empty no-ops
+    big = RefreshPipeline(opt, 64)
+    big_units = [u for chunk in big.schedule for u in chunk]
+    assert sorted(big_units) == sorted(units)
+    assert any(not chunk for chunk in big.schedule)
+
+
+# ---------------------------------------------------------------------------
+# the state machine: capture -> drain -> flip -> idle
+# ---------------------------------------------------------------------------
+
+def test_activation_timing_and_inflight_sequence():
+    """The capture leaves the active preconditioner untouched; it stays
+    bit-frozen through all K drain steps and flips exactly at step K+1 to
+    the same inverses the inline double-buffer refresh stages in one step
+    (identical math, chunked schedule)."""
+    opt, params, state, batch = _opt(double_buffer=True, refresh_chunks=K)
+    opt_db, _, state_db, _ = _opt(double_buffer=True)
+    flags = {k: jnp.asarray(True) for k in opt.stat_names()}
+    init_pc = state["curv"]
+
+    # inline reference: stages the fresh inverses at the capture step
+    _, s_db, _ = jax.jit(opt_db.step)(params, state_db, batch, flags, *ARGS)
+
+    p, s, m = jax.jit(opt.step)(params, state, batch, flags, *ARGS)
+    assert int(m["refresh_inflight"]) == K + 1
+    assert int(s["pipeline"]["cursor"]) == 0
+    for fam in s["curv"]:
+        assert _bitwise_equal(s["curv"][fam]["precond"],
+                              init_pc[fam]["precond"])
+
+    seen = []
+    for i in range(K + 2):
+        p, s, m = jax.jit(opt.step_fast)(p, s, batch, *ARGS)
+        seen.append(int(m["refresh_inflight"]))
+        if i < K:      # drain steps: the active buffer stays bit-frozen
+            for fam in s["curv"]:
+                assert _bitwise_equal(s["curv"][fam]["precond"],
+                                      init_pc[fam]["precond"]), i
+    # K+1 again on the first drain step (the capture did not advance the
+    # cursor), counting down to 1 on the flip/activation step, then idle
+    assert seen == list(range(K + 1, 0, -1)) + [0]
+    assert int(s["pipeline"]["cursor"]) == K + 1
+
+    # post-flip: active == staged == the inline refresh's staged inverses
+    for fam in s["curv"]:
+        assert _bitwise_equal(s["curv"][fam]["precond"],
+                              s["curv"][fam]["precond_next"])
+        for key in s["curv"][fam]["precond"]:
+            np.testing.assert_allclose(
+                np.asarray(s["curv"][fam]["precond"][key]),
+                np.asarray(s_db["curv"][fam]["precond_next"][key]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{fam}.{key}")
+
+    # idle steps leave the whole curvature tree bit-identical
+    _, s2, m2 = jax.jit(opt.step_fast)(p, s, batch, *ARGS)
+    assert int(m2["refresh_inflight"]) == 0
+    assert _bitwise_equal(s2["curv"], s["curv"])
+    assert _bitwise_equal(s2["pipeline"], s["pipeline"])
+
+
+def test_mid_drain_recapture_restarts_cleanly():
+    """A capture arriving before the previous drain finished (offset
+    per-stat schedules can do this) restarts the pipeline on the NEW
+    statistics; the interrupted refresh never activates (its flip was
+    pending work that the restart discards — cursor < K means no flip)."""
+    opt, params, state, batch = _opt(double_buffer=True, refresh_chunks=K)
+    flags = {k: jnp.asarray(True) for k in opt.stat_names()}
+    init_pc = state["curv"]
+
+    p, s, _ = jax.jit(opt.step)(params, state, batch, flags, *ARGS)
+    p, s, _ = jax.jit(opt.step_fast)(p, s, batch, *ARGS)   # chunk 0 only
+    p, s, m = jax.jit(opt.step)(p, s, batch, flags, *ARGS)  # recapture
+    assert int(m["refresh_inflight"]) == K + 1
+    assert int(s["pipeline"]["cursor"]) == 0
+    for fam in s["curv"]:       # the interrupted refresh never flipped
+        assert _bitwise_equal(s["curv"][fam]["precond"],
+                              init_pc[fam]["precond"])
+    for _ in range(K + 1):      # full drain of the second capture
+        p, s, _ = jax.jit(opt.step_fast)(p, s, batch, *ARGS)
+    changed = any(
+        not _bitwise_equal(s["curv"][fam]["precond"],
+                           init_pc[fam]["precond"]) for fam in s["curv"])
+    assert changed              # the second refresh did activate
+    for leaf in jax.tree.leaves(s):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_upgrade_state_pipeline_layouts():
+    opt_db, _, state_db, _ = _opt(double_buffer=True)
+    opt_pl, _, state_pl, _ = _opt(double_buffer=True, refresh_chunks=K)
+    # pre-pipeline checkpoint -> pipelined run: fresh idle pipeline seeded
+    up = opt_pl.upgrade_state(state_db)
+    assert jax.tree.structure(up) == jax.tree.structure(state_pl)
+    assert int(up["pipeline"]["cursor"]) == K + 1          # idle, no flip
+    assert not any(bool(v) for v in jax.tree.leaves(up["pipeline"]["valid"]))
+    # pipelined checkpoint -> inline run: pipeline state dropped
+    down = opt_db.upgrade_state(state_pl)
+    assert jax.tree.structure(down) == jax.tree.structure(state_db)
+    # same-layout passthrough
+    assert _bitwise_equal(opt_pl.upgrade_state(state_pl), state_pl)
+
+
+# ---------------------------------------------------------------------------
+# the controller floor that keeps captures from outrunning the drain
+# ---------------------------------------------------------------------------
+
+def test_interval_controller_min_interval_floor():
+    ctrl = IntervalController(["x"], alpha=0.1, min_interval=K + 1)
+    # a shrink that Algorithm 2 would drive to 1 is clamped to the floor
+    ctrl.update(1, {"x": True}, {"x": (0.9, 0.9)})
+    st = ctrl.stats["x"]
+    assert st.delta == K + 1 and st.t_next == 1 + (K + 1)
+    # growth proceeds from the clamped value (the Fibonacci recurrence
+    # simply starts higher; it is not re-floored away)
+    ctrl.update(st.t_next, {"x": True}, {"x": (0.0, 0.0)})
+    assert ctrl.stats["x"].delta == (K + 1) + 1
+    # serialization round-trips the floor; old checkpoints default to 1
+    rt = IntervalController.from_state_dict(ctrl.state_dict())
+    assert rt.min_interval == K + 1
+    legacy = ctrl.state_dict()
+    del legacy["min_interval"]
+    assert IntervalController.from_state_dict(legacy).min_interval == 1
+
+
+def test_chunk_names_and_costs():
+    opt, *_ = _opt(double_buffer=True, refresh_chunks=K)
+    pipe = opt.pipeline
+    names = [n for i in range(K) for n in pipe.chunk_names(i)]
+    assert sorted(names) == sorted(opt.stat_names())
+    assert len(pipe.loads) == K and all(l > 0 for l in pipe.loads)

@@ -278,6 +278,86 @@ def test_batcher_matches_solo_decode():
         assert got[r.uid] == want, r.uid
 
 
+def test_batcher_bucketed_prefill_parity():
+    """Power-of-two prompt bucketing is invisible: padded prefill (3 -> 4,
+    5/6 -> 8) produces the same tokens as the exact-shape solo decode, and
+    the jit cache holds one program per bucket, not one per length."""
+    model, params = _model(n_kv_heads=1, window=8, backend="ref")
+    serve = ServeConfig(kv_cache="ring", kv_dtype="f32")
+    rng = np.random.default_rng(13)
+    reqs = [Request(prompt=rng.integers(0, model.cfg.vocab, (int(n),)),
+                    max_new=4, uid=i)
+            for i, n in enumerate([3, 5, 6, 5])]
+    bat = ContinuousBatcher(model, params, serve, slots=2, max_len=24)
+    got = bat.run(list(reqs))
+    assert set(bat._prefill) == {4, 8}          # buckets, not raw lengths
+
+    step_fn = _decode_fn(model, serve)
+    for r in reqs:
+        lg, cache = model.prefill(
+            params, {"tokens": jnp.asarray(r.prompt)[None]}, 24, serve=serve)
+        tok = int(jnp.argmax(lg[0, -1]))
+        want = [tok]
+        for _ in range(r.max_new - 1):
+            lg, cache = step_fn(params, cache, jnp.asarray([tok], jnp.int32))
+            tok = int(jnp.argmax(lg[0]))
+            want.append(tok)
+        assert got[r.uid] == want, r.uid
+
+
+def test_batcher_bucket_clamps_to_ring_capacity():
+    """A bucket past the ring capacity would wrap pad writes over real
+    in-window keys; those prompts fall back to exact-shape prefill."""
+    model, params = _model(n_kv_heads=1, window=4, backend="ref")
+    serve = ServeConfig(kv_cache="ring", kv_dtype="f32")
+    rng = np.random.default_rng(3)
+    bat = ContinuousBatcher(model, params, serve, slots=1, max_len=16)
+    bat.run([Request(prompt=rng.integers(0, model.cfg.vocab, (7,)),
+                     max_new=2, uid=0),
+             Request(prompt=rng.integers(0, model.cfg.vocab, (3,)),
+                     max_new=2, uid=1)])
+    assert set(bat._prefill) == {7, 4}   # 7: exact fallback; 3: bucket 4
+
+
+def test_batcher_sampling_deterministic_and_slot_invariant():
+    """A sampled request's tokens are a pure function of (seed, uid,
+    prompt, max_new): identical across reruns and across different slot
+    counts (admission interleavings); a different seed moves the output."""
+    model, params = _model(n_kv_heads=1, window=4, backend="ref")
+    serve = ServeConfig(kv_cache="ring", kv_dtype="f32")
+    rng = np.random.default_rng(21)
+    reqs = [Request(prompt=rng.integers(0, model.cfg.vocab, (4,)),
+                    max_new=6, uid=i) for i in range(3)]
+    kw = dict(slots=2, max_len=16, temperature=0.8, top_k=8, seed=42)
+    a = ContinuousBatcher(model, params, serve, **kw).run(list(reqs))
+    b = ContinuousBatcher(model, params, serve, **kw).run(list(reqs))
+    assert a == b
+    c = ContinuousBatcher(model, params, serve, slots=3, max_len=16,
+                          temperature=0.8, top_k=8, seed=42).run(list(reqs))
+    assert a == c    # per-uid streams: lane assignment never perturbs them
+    d = ContinuousBatcher(model, params, serve, slots=2, max_len=16,
+                          temperature=0.8, top_k=8, seed=7).run(list(reqs))
+    assert d != a
+
+
+def test_batcher_temperature_zero_is_greedy():
+    """temperature=0 keeps the greedy program (seed is irrelevant), and
+    top_k=1 reduces sampling to argmax at any temperature."""
+    model, params = _model(n_kv_heads=1, window=4, backend="ref")
+    serve = ServeConfig(kv_cache="ring", kv_dtype="f32")
+    rng = np.random.default_rng(17)
+    reqs = [Request(prompt=rng.integers(0, model.cfg.vocab, (4,)),
+                    max_new=5, uid=i) for i in range(2)]
+    greedy = ContinuousBatcher(model, params, serve,
+                               slots=2, max_len=16).run(list(reqs))
+    t0 = ContinuousBatcher(model, params, serve, slots=2, max_len=16,
+                           temperature=0.0, seed=123).run(list(reqs))
+    assert t0 == greedy
+    k1 = ContinuousBatcher(model, params, serve, slots=2, max_len=16,
+                           temperature=0.7, top_k=1, seed=5).run(list(reqs))
+    assert k1 == greedy
+
+
 def test_batcher_slot_reuse():
     """A drained slot is re-admitted immediately and the reused lane's
     stale ring contents never leak into the new sequence."""
